@@ -1,0 +1,108 @@
+"""Kernel micro-benchmarks (wall clock on this CPU container).
+
+The XLA oracle path is the CPU production path (and the dry-run FLOPs
+path); the Pallas kernels are TPU-targeted and validated in interpret mode
+by tests (interpret-mode timing is meaningless, so it is not reported).
+Also benches the TPU-native on-device cascade vs naive full evaluation —
+the jitted twin of Hydro's short-circuiting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.harness import record, timeit
+from repro.core.vectorized import cascade_filter
+from repro.kernels import ops
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+
+    # flash attention (xla path)
+    for b, s, h, hkv, d in ((1, 1024, 8, 2, 64), (2, 2048, 8, 2, 64)):
+        q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+        fn = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="xla"))
+        t = timeit(lambda: fn(q, k, v).block_until_ready())
+        flops = 4 * b * h * s * s * d / 2  # causal
+        record(f"kernel/attention_xla_b{b}_s{s}", t * 1e6,
+               f"gflops={flops/t/1e9:.1f}")
+
+    # SWA banded vs full (the sub-quadratic win)
+    b, s, h, hkv, d, w = 1, 4096, 4, 1, 64, 512
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    full = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="xla"))
+    swa = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, window=w, impl="xla"))
+    t_full = timeit(lambda: full(q, k, v).block_until_ready())
+    t_swa = timeit(lambda: swa(q, k, v).block_until_ready())
+    record("kernel/swa_banded_s4096_w512", t_swa * 1e6,
+           f"speedup_vs_full={t_full/t_swa:.2f}x")
+
+    # decode attention
+    b, s, h, hkv, d = 8, 4096, 8, 2, 64
+    qd = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    lens = jnp.full((b,), s, jnp.int32)
+    fn = jax.jit(lambda q, k, v, l: ops.decode_attention(q, k, v, l, impl="xla"))
+    t = timeit(lambda: fn(qd, kc, vc, lens).block_until_ready())
+    record(f"kernel/decode_attention_b{b}_s{s}", t * 1e6,
+           f"bytes={kc.nbytes*2/1e6:.0f}MB")
+
+    # rglru
+    b, s, w_ = 2, 1024, 512
+    x = jnp.asarray(rng.standard_normal((b, s, w_)), jnp.float32)
+    r = jnp.asarray(rng.standard_normal((b, s, w_)), jnp.float32)
+    i = jnp.asarray(rng.standard_normal((b, s, w_)), jnp.float32)
+    a = jnp.asarray(rng.standard_normal((w_,)), jnp.float32)
+    fn = jax.jit(lambda x, r, i, a: ops.rglru(x, r, i, a, impl="xla")[0])
+    t = timeit(lambda: fn(x, r, i, a).block_until_ready())
+    record(f"kernel/rglru_s{s}_w{w_}", t * 1e6, "")
+
+    # ssd
+    b, s, h, p, g, n = 1, 1024, 8, 64, 1, 64
+    xs = jnp.asarray(rng.standard_normal((b, s, h, p)) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, s, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (h,)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, g, n)) * 0.3, jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, g, n)) * 0.3, jnp.float32)
+    fn = jax.jit(lambda *args: ops.ssd(*args, chunk=64, impl="xla")[0])
+    t = timeit(lambda: fn(xs, dt, A, B, C).block_until_ready())
+    record(f"kernel/ssd_s{s}_h{h}", t * 1e6, "")
+
+    # hsv color classify
+    crops = jnp.asarray(rng.uniform(0, 255, (64, 64, 64, 3)), jnp.float32)
+    fn = jax.jit(lambda c: ops.hsv_color_classify(c, impl="xla")[0])
+    t = timeit(lambda: fn(crops).block_until_ready())
+    record("kernel/hsv_color_64x64x64", t * 1e6,
+           f"rows_per_s={64/t:.0f}")
+
+    # moe router
+    logits = jnp.asarray(rng.standard_normal((65536, 128)), jnp.float32)
+    fn = jax.jit(lambda l: ops.moe_topk_router(l, 2, impl="xla")[0])
+    t = timeit(lambda: fn(logits).block_until_ready())
+    record("kernel/moe_router_t65536_e128", t * 1e6, "")
+
+    # on-device cascade vs naive (TPU-native short-circuit)
+    x = jnp.asarray(rng.standard_normal((4096, 64)), jnp.float32)
+    big = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    cheap = lambda v: v[:, 0] > 0.8            # selective & cheap
+    heavy = lambda v: ((v @ big) @ big.T).sum(-1) > 0.0
+
+    naive = jax.jit(lambda v: cheap(v) & heavy(v))
+    casc = jax.jit(lambda v: cascade_filter([cheap, heavy], v,
+                                            bucket_fractions=[0.25]))
+    np.testing.assert_array_equal(np.asarray(naive(x)), np.asarray(casc(x)))
+    t_n = timeit(lambda: naive(x).block_until_ready())
+    t_c = timeit(lambda: casc(x).block_until_ready())
+    record("vectorized/cascade_vs_naive", t_c * 1e6,
+           f"speedup={t_n/t_c:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

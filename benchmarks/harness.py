@@ -1,0 +1,32 @@
+"""Shared benchmark utilities: timing, CSV rows, Hydro system variants."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+ROWS: List[Dict] = []
+
+
+def record(name: str, us_per_call: float, derived: str = "") -> Dict:
+    row = {"name": name, "us_per_call": us_per_call, "derived": derived}
+    ROWS.append(row)
+    print(f"{name},{us_per_call:.1f},{derived}")
+    return row
+
+
+def timeit(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def csv_header() -> None:
+    print("name,us_per_call,derived")

@@ -1,0 +1,34 @@
+"""Hydro: adaptive query processing of ML queries — the paper's contribution.
+
+Public surface:
+  RoutingBatch / make_batch          — §3.3 batch + metadata
+  CentralQueue / BoundedQueue        — §3.2/§3.3 queues, lambda watermark
+  StatsBoard                         — §3.3 runtime statistics
+  UDF / Predicate                    — ML UDF wrappers (shape-bucketed)
+  ReuseCache                         — §4.3 result reuse
+  policies: CostDriven / ScoreDriven / SelectivityDriven / ReuseAware /
+            HydroPolicy; RoundRobin / DataAware / DeviceAlternating
+  LaminarRouter (GACU) / EddyRouter / AQPExecutor — §3.2, §4, §5
+  Query / optimize / PhysicalPlan    — §3.1 rule-based plan -> AQP plan
+  SimClock / WallClock               — deterministic scheduling evaluation
+  vectorized (two_stage_filter / cascade_filter) — TPU-native short-circuit
+"""
+from repro.core.batch import RoutingBatch, make_batch  # noqa: F401
+from repro.core.cache import ReuseCache  # noqa: F401
+from repro.core.executor import AQPExecutor  # noqa: F401
+from repro.core.laminar import GACU_MAX_WORKERS, LaminarRouter  # noqa: F401
+from repro.core.plan import PhysicalPlan, Query, TrivialPredicate, optimize  # noqa: F401
+from repro.core.policies import (  # noqa: F401
+    CostDriven,
+    DataAware,
+    DeviceAlternating,
+    HydroPolicy,
+    ReuseAware,
+    RoundRobin,
+    ScoreDriven,
+    SelectivityDriven,
+)
+from repro.core.queues import BoundedQueue, CentralQueue  # noqa: F401
+from repro.core.simclock import SimClock, WallClock  # noqa: F401
+from repro.core.stats import PredicateStats, StatsBoard  # noqa: F401
+from repro.core.udf import UDF, Predicate  # noqa: F401

@@ -1,0 +1,70 @@
+"""RoutingBatch — the unit of data flowing through the AQP executor (§3.3).
+
+Each batch carries a unique id (cheaper than hashing multi-dimensional
+payloads, exactly as the paper argues), column data, per-row source ids (for
+the reuse cache), and the set of predicates already evaluated. Eager
+materialization: ``filter`` drops failing rows immediately so later
+predicates see only survivors.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Dict, FrozenSet, Optional
+
+import numpy as np
+
+_next_id = itertools.count()
+_id_lock = threading.Lock()
+
+
+def _new_id() -> int:
+    with _id_lock:
+        return next(_next_id)
+
+
+@dataclass(frozen=True)
+class RoutingBatch:
+    data: Dict[str, np.ndarray]          # column -> (rows, ...) arrays
+    row_ids: np.ndarray                  # (rows,) stable source ids (cache keys)
+    bid: int = field(default_factory=_new_id)
+    visited: FrozenSet[str] = frozenset()
+    warmup: bool = False
+    created_at: float = 0.0
+    sim_ready: float = 0.0   # virtual arrival time (SimClock runs)
+
+    @property
+    def rows(self) -> int:
+        return int(self.row_ids.shape[0])
+
+    @property
+    def empty(self) -> bool:
+        return self.rows == 0
+
+    def mark_visited(self, predicate: str) -> "RoutingBatch":
+        return replace(self, visited=self.visited | {predicate})
+
+    def filter(self, mask: np.ndarray) -> "RoutingBatch":
+        """Eager materialization: keep only rows where mask is True."""
+        mask = np.asarray(mask, bool)
+        assert mask.shape[0] == self.rows, (mask.shape, self.rows)
+        data = {k: v[mask] for k, v in self.data.items()}
+        return replace(self, data=data, row_ids=self.row_ids[mask])
+
+    def column(self, name: str) -> np.ndarray:
+        return self.data[name]
+
+    def unvisited(self, predicates) -> list:
+        return [p for p in predicates if p.name not in self.visited]
+
+    def done(self, predicates) -> bool:
+        return all(p.name in self.visited for p in predicates) or self.empty
+
+
+def make_batch(data: Dict[str, np.ndarray], row_ids: Optional[np.ndarray] = None,
+               **kw) -> RoutingBatch:
+    rows = len(next(iter(data.values())))
+    if row_ids is None:
+        row_ids = np.arange(rows)
+    return RoutingBatch(data=data, row_ids=np.asarray(row_ids), **kw)

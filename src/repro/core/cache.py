@@ -1,0 +1,83 @@
+"""Reuse cache for UDF results (§4.3, UC2).
+
+Keyed by (udf_name, row_id) — row ids are stable source identifiers (e.g.
+video frame id x object index), so results cached by one query are reused by
+later queries over overlapping ranges (the paper's exploratory-analysis
+pattern). ``probe`` returns the per-batch hit mask in O(rows) so the
+REUSE-AWARE router can estimate
+
+    estimated_cost = (1 - cache_hit_rate) * cost_of_computing_UDF
+
+before routing, per the paper. Optionally spills to disk (npz) to mirror the
+paper's on-disk KV store.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+class ReuseCache:
+    def __init__(self, path: Optional[str] = None):
+        self._data: Dict[str, Dict[int, np.ndarray]] = {}
+        self._lock = threading.RLock()
+        self.path = path
+        if path and os.path.exists(path):
+            self._load()
+
+    # ----------------------------- core ----------------------------- #
+    def probe(self, udf: str, row_ids: np.ndarray) -> Tuple[np.ndarray, list]:
+        """(hit_mask (rows,), values list aligned to rows; None on miss)."""
+        with self._lock:
+            table = self._data.get(udf, {})
+            hits = np.zeros(len(row_ids), bool)
+            vals = []
+            for i, rid in enumerate(np.asarray(row_ids).tolist()):
+                v = table.get(int(rid))
+                hits[i] = v is not None
+                vals.append(v)
+            return hits, vals
+
+    def hit_rate(self, udf: str, row_ids: np.ndarray) -> float:
+        hits, _ = self.probe(udf, row_ids)
+        return float(hits.mean()) if len(hits) else 0.0
+
+    def put(self, udf: str, row_ids: np.ndarray, values: np.ndarray) -> None:
+        with self._lock:
+            table = self._data.setdefault(udf, {})
+            for rid, v in zip(np.asarray(row_ids).tolist(), values):
+                table[int(rid)] = np.asarray(v)
+
+    def __contains__(self, udf: str) -> bool:
+        with self._lock:
+            return udf in self._data and bool(self._data[udf])
+
+    def size(self, udf: str) -> int:
+        with self._lock:
+            return len(self._data.get(udf, {}))
+
+    # ----------------------------- disk ----------------------------- #
+    def flush(self) -> None:
+        if not self.path:
+            return
+        with self._lock:
+            blob = {}
+            for udf, table in self._data.items():
+                if not table:
+                    continue
+                ids = np.array(sorted(table), dtype=np.int64)
+                vals = np.stack([table[int(i)] for i in ids])
+                blob[f"{udf}__ids"] = ids
+                blob[f"{udf}__vals"] = vals
+            np.savez(self.path, **blob)
+
+    def _load(self) -> None:
+        data = np.load(self.path, allow_pickle=False)
+        names = {k[: -len("__ids")] for k in data.files if k.endswith("__ids")}
+        for udf in names:
+            ids = data[f"{udf}__ids"]
+            vals = data[f"{udf}__vals"]
+            self._data[udf] = {int(i): v for i, v in zip(ids, vals)}

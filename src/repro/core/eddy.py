@@ -1,0 +1,139 @@
+"""Eddy pull + router (§3.2, §4.1).
+
+EDDY PULL drains the child executor into the central queue, honoring the
+lambda watermark. EDDY ROUTER orchestrates: completed batches (all
+predicates visited, or emptied by eager materialization) go to the output
+queue; unfinished batches go to the Laminar router of the predicate chosen
+by the routing policy.
+
+WARMUP (§4.1): until every predicate has at least one measurement, the
+first batches are fanned out round-robin so all predicates get measured in
+parallel; other batches are DELAYED via the circular flow — popped from the
+head of the central queue and reinserted at the tail — so no batch is
+routed in a possibly-suboptimal order before statistics exist.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, List, Optional
+
+from repro.core.batch import RoutingBatch
+from repro.core.cache import ReuseCache
+from repro.core.laminar import LaminarRouter
+from repro.core.policies import EddyPolicy
+from repro.core.queues import BoundedQueue, CentralQueue, ClosedError
+from repro.core.stats import StatsBoard
+from repro.core.udf import Predicate
+
+
+class EddyPull(threading.Thread):
+    """Pulls batches from the child iterator into the central queue."""
+
+    def __init__(self, source: Iterable[RoutingBatch], central: CentralQueue):
+        super().__init__(daemon=True, name="eddy-pull")
+        self.source = source
+        self.central = central
+        self.injected = 0
+        self.done = threading.Event()
+        self.error: Optional[BaseException] = None
+
+    def run(self) -> None:
+        try:
+            for batch in self.source:
+                self.injected += 1
+                while not self.central.put_pull(batch, timeout=0.2):
+                    pass  # below-watermark wait (deadlock prevention, §3.3)
+        except ClosedError:
+            pass
+        except BaseException as e:  # surfaced by the executor
+            self.error = e
+        finally:
+            self.done.set()
+
+
+class EddyRouter(threading.Thread):
+    """The orchestration loop: completion, warmup, policy routing."""
+
+    def __init__(
+        self,
+        preds: List[Predicate],
+        central: CentralQueue,
+        output: BoundedQueue,
+        laminars: Dict[str, LaminarRouter],
+        stats: StatsBoard,
+        policy: EddyPolicy,
+        pull: EddyPull,
+        *,
+        cache: Optional[ReuseCache] = None,
+        warmup: bool = True,
+    ):
+        super().__init__(daemon=True, name="eddy-router")
+        self.preds = preds
+        self.central = central
+        self.output = output
+        self.laminars = laminars
+        self.stats = stats
+        self.policy = policy
+        self.pull = pull
+        self.cache = cache
+        self.warmup_enabled = warmup and len(preds) > 1
+        self.completed = 0
+        self.error: Optional[BaseException] = None
+        self._warmup_dispatched: set = set()
+        self.circulations = 0
+
+    # ------------------------------------------------------------------ #
+    def _in_flight(self) -> int:
+        return self.pull.injected - self.completed
+
+    def _route(self, batch: RoutingBatch) -> None:
+        remaining = batch.unvisited(self.preds)
+        in_warmup = self.warmup_enabled and not self.stats.all_measured()
+
+        if in_warmup:
+            # "just enough batches": one warmup batch per unmeasured predicate
+            candidates = [
+                p for p in remaining
+                if not self.stats[p.name].measured
+                and p.name not in self._warmup_dispatched
+            ]
+            if candidates:
+                target = candidates[0]
+                self._warmup_dispatched.add(target.name)
+                self.laminars[target.name].submit(batch)
+                return
+            # can't help warmup: circular delay (head -> tail, §4.1)
+            self.circulations += 1
+            self.central.put_worker(batch)
+            import time as _time
+
+            _time.sleep(0.0005)  # don't hot-spin the 1-core host
+            return
+
+        ranked = self.policy.rank(batch, remaining, self.stats, self.cache)
+        self.laminars[ranked[0].name].submit(batch)
+
+    def run(self) -> None:
+        try:
+            while True:
+                if (
+                    self.pull.done.is_set()
+                    and self._in_flight() == 0
+                ):
+                    break
+                try:
+                    batch = self.central.get(timeout=0.1)
+                except TimeoutError:
+                    continue
+                except ClosedError:
+                    break
+                if batch.done(self.preds):
+                    self.completed += 1
+                    if not batch.empty:
+                        self.output.put(batch)
+                    continue
+                self._route(batch)
+        except BaseException as e:
+            self.error = e
+        finally:
+            self.output.close()

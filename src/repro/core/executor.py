@@ -1,0 +1,127 @@
+"""AQPExecutor — wires EddyPull + EddyRouter + Laminar routers + workers
+into the executor of Fig. 2 and exposes the parent-executor pull interface
+(a blocking iterator over the output queue).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence
+
+from repro.core.batch import RoutingBatch
+from repro.core.cache import ReuseCache
+from repro.core.eddy import EddyPull, EddyRouter
+from repro.core.laminar import GACU_MAX_WORKERS, LaminarRouter
+from repro.core.policies import EddyPolicy, HydroPolicy, LaminarPolicy, RoundRobin
+from repro.core.queues import BoundedQueue, CentralQueue, ClosedError
+from repro.core.simclock import WallClock
+from repro.core.stats import StatsBoard
+from repro.core.udf import Predicate
+
+
+class AQPExecutor:
+    def __init__(
+        self,
+        predicates: List[Predicate],
+        *,
+        policy: Optional[EddyPolicy] = None,
+        laminar_policy_factory=RoundRobin,
+        clock=None,
+        cache: Optional[ReuseCache] = None,
+        central_capacity: int = 64,
+        lam: float = 0.3,
+        max_workers: int = GACU_MAX_WORKERS,
+        devices: Optional[Dict[str, Sequence[str]]] = None,  # pred -> device groups
+        serial_fraction: float = 0.0,
+        warmup: bool = True,
+        output_capacity: int = 1024,
+        cost_alpha: float = 0.3,
+    ):
+        self.predicates = predicates
+        self.policy = policy or HydroPolicy()
+        self.clock = clock or WallClock()
+        self.cache = cache
+        self.stats = StatsBoard([p.name for p in predicates], cost_alpha=cost_alpha)
+        self.central = CentralQueue(central_capacity, lam)
+        self.output = BoundedQueue(output_capacity)
+        self._error_lock = threading.Lock()
+        self._worker_error = None
+        self.laminars: Dict[str, LaminarRouter] = {
+            p.name: LaminarRouter(
+                p,
+                self.central,
+                self.stats,
+                cache=cache,
+                clock=self.clock,
+                policy=laminar_policy_factory(),
+                max_workers=max_workers,
+                devices=(devices or {}).get(p.name, (p.resource,)),
+                serial_fraction=serial_fraction,
+                on_error=self._on_worker_error,
+            )
+            for p in predicates
+        }
+        self.warmup = warmup
+        self._pull: Optional[EddyPull] = None
+        self._router: Optional[EddyRouter] = None
+
+    # ------------------------------------------------------------------ #
+    def _on_worker_error(self, exc, tb):
+        with self._error_lock:
+            if self._worker_error is None:
+                self._worker_error = (exc, tb)
+        self.output.close()
+        self.central.close()
+
+    def run(self, source: Iterable[RoutingBatch]) -> Iterator[RoutingBatch]:
+        """Execute; yields completed (non-empty) batches in completion order."""
+        self._pull = EddyPull(source, self.central)
+        self._router = EddyRouter(
+            self.predicates, self.central, self.output, self.laminars,
+            self.stats, self.policy, self._pull,
+            cache=self.cache, warmup=self.warmup,
+        )
+        self._pull.start()
+        self._router.start()
+        try:
+            while True:
+                try:
+                    yield self.output.get(timeout=1.0)
+                except TimeoutError:
+                    if self._worker_error is not None:
+                        break
+                    continue
+                except ClosedError:
+                    break
+        finally:
+            self.shutdown()
+        if self._worker_error is not None:
+            exc, tb = self._worker_error
+            raise RuntimeError(f"predicate worker failed:\n{tb}") from exc
+        if self._pull.error is not None:
+            raise self._pull.error
+        if self._router.error is not None:
+            raise self._router.error
+
+    def collect(self, source: Iterable[RoutingBatch]) -> List[RoutingBatch]:
+        return list(self.run(source))
+
+    def shutdown(self) -> None:
+        for lam in self.laminars.values():
+            lam.stop()
+        self.central.close()
+        self.output.close()
+
+    # ------------------------------ metrics ---------------------------- #
+    def stats_snapshot(self):
+        return self.stats.snapshot()
+
+    def active_worker_counts(self) -> Dict[str, int]:
+        return {
+            name: sum(1 for w in lam.workers if w.activated)
+            for name, lam in self.laminars.items()
+        }
+
+    @property
+    def makespan(self) -> float:
+        """Simulated-clock makespan (SimClock only)."""
+        return getattr(self.clock, "makespan", 0.0)

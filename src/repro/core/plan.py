@@ -1,0 +1,145 @@
+"""Logical query plan + rule-based optimization (§3.1).
+
+Hydro's optimizer does only RULE-based work statically — predicate pushdown,
+trivial (non-UDF) predicate ordering, cache/reuse wiring — and hands every
+UDF-based conjunct to the AQP executor, whose routing replaces cost-based
+static ordering. Mirrors the paper's EvaDB integration at the granularity
+this repo needs: Scan -> Apply(UNNEST) -> [trivial filters] -> AQPFilter ->
+Project.
+"""
+from __future__ import annotations
+
+import operator
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.batch import RoutingBatch, make_batch
+from repro.core.cache import ReuseCache
+from repro.core.executor import AQPExecutor
+from repro.core.udf import Predicate
+
+_OPS = {
+    "<=": operator.le, "<": operator.lt, ">=": operator.ge, ">": operator.gt,
+    "==": operator.eq, "!=": operator.ne,
+}
+
+
+@dataclass(frozen=True)
+class TrivialPredicate:
+    """Non-UDF conjunct, e.g. rating <= 1. Free to evaluate -> pushed down."""
+
+    column: str
+    op: str
+    value: object
+
+    def mask(self, data: Dict[str, np.ndarray]) -> np.ndarray:
+        return np.asarray(_OPS[self.op](data[self.column], self.value), bool)
+
+
+@dataclass
+class Query:
+    source: Iterable[Dict[str, np.ndarray]]     # scan (+ apply/UNNEST upstream)
+    predicates: List[Predicate]                 # UDF-based conjuncts -> AQP
+    trivial: List[TrivialPredicate] = field(default_factory=list)
+    project: Optional[Sequence[str]] = None
+    batch_rows: int = 10                        # paper's routing-batch size
+
+
+@dataclass
+class PhysicalPlan:
+    query: Query
+    executor: AQPExecutor
+    description: List[str]
+
+    def run(self) -> Iterator[RoutingBatch]:
+        return self.executor.run(_batches(self.query))
+
+    def collect_rows(self) -> Dict[str, np.ndarray]:
+        cols: Dict[str, List[np.ndarray]] = {}
+        ids: List[np.ndarray] = []
+        keep = self.query.project
+        for b in self.executor.run(_batches(self.query)):
+            ids.append(b.row_ids)
+            for k, v in b.data.items():
+                if keep is None or k in keep:
+                    cols.setdefault(k, []).append(v)
+        out = {k: np.concatenate(v) if v else np.zeros((0,)) for k, v in cols.items()}
+        out["_row_id"] = np.concatenate(ids) if ids else np.zeros((0,), np.int64)
+        return out
+
+
+def _batches(q: Query) -> Iterator[RoutingBatch]:
+    """Scan -> trivial-filter pushdown -> routing batches (eager drop)."""
+    buf: Dict[str, List] = {}
+    ids: List[int] = []
+
+    def flush():
+        nonlocal buf, ids
+        if not ids:
+            return None
+        data = {k: np.asarray(v) for k, v in buf.items()}
+        rb = make_batch(data, np.asarray(ids))
+        buf, ids = {}, []
+        return rb
+
+    for chunk in q.source:
+        rows = len(chunk["_row_id"]) if "_row_id" in chunk else len(
+            next(iter(chunk.values()))
+        )
+        mask = np.ones(rows, bool)
+        for tp in q.trivial:  # pushdown: trivial predicates run at scan time
+            mask &= tp.mask(chunk)
+        for i in np.nonzero(mask)[0]:
+            ids.append(int(chunk["_row_id"][i]) if "_row_id" in chunk else len(ids))
+            for k, v in chunk.items():
+                if k == "_row_id":
+                    continue
+                buf.setdefault(k, []).append(v[i])
+            if len(ids) >= q.batch_rows:
+                yield flush()
+    tail = flush()
+    if tail is not None:
+        yield tail
+
+
+def optimize(
+    q: Query,
+    *,
+    cache: Optional[ReuseCache] = None,
+    aqp: bool = True,
+    executor_kwargs: Optional[dict] = None,
+) -> PhysicalPlan:
+    """Rule-based optimization -> physical plan.
+
+    Rules applied (in order):
+      1. TrivialPushdown — non-UDF conjuncts run at scan (lowest cost first;
+         the paper's "trivial predicate reordering").
+      2. CacheReuse — wire the reuse cache into UDF evaluation when present.
+      3. AQPRule — wrap all UDF conjuncts into one AQP executor; disable
+         warmup when only one predicate (nothing to reorder).
+    """
+    desc = []
+    trivial = sorted(q.trivial, key=lambda t: 0)  # all trivially free
+    if trivial:
+        desc.append(f"TrivialPushdown({[t.column + t.op + str(t.value) for t in trivial]})")
+    if cache is not None:
+        desc.append("CacheReuse(on)")
+    kw = dict(executor_kwargs or {})
+    if not aqp:
+        kw.setdefault("warmup", False)
+        from repro.core.policies import EddyPolicy
+
+        class _FixedOrder(EddyPolicy):
+            name = "no-reordering"
+
+            def rank(self, batch, preds, stats, cache):
+                return preds  # conjunction order, left to right
+
+        kw.setdefault("policy", _FixedOrder())
+        desc.append("StaticPlan(no reordering)")
+    else:
+        desc.append("AQPRule(eddy+laminar)")
+    executor = AQPExecutor(q.predicates, cache=cache, **kw)
+    return PhysicalPlan(q, executor, desc)

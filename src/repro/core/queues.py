@@ -1,0 +1,144 @@
+"""Queues of the AQP executor (§3.2/§3.3).
+
+CentralQueue implements the paper's deadlock prevention: the EDDY PULL may
+insert only while the queue is < lambda (default 0.3) full, while predicate
+workers may ALWAYS reinsert — completed batches can never be blocked out by
+fresh ingest, so the cycle (pull -> route -> worker -> central) cannot
+deadlock. Worker input queues are bounded short (default 2) to cap backlog,
+exactly as in the paper.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Optional
+
+LAMBDA_DEFAULT = 0.3
+
+
+class ClosedError(RuntimeError):
+    pass
+
+
+class CentralQueue:
+    def __init__(self, capacity: int = 64, lam: float = LAMBDA_DEFAULT):
+        assert capacity > 0 and 0 < lam <= 1
+        self.capacity = capacity
+        self.lam = lam
+        self._q: collections.deque = collections.deque()
+        self._cv = threading.Condition()
+        self._closed = False
+
+    # -------------------- producer side -------------------- #
+    def put_pull(self, item: Any, timeout: Optional[float] = None) -> bool:
+        """EddyPull insert: allowed only below the lambda watermark."""
+        limit = max(1, int(self.capacity * self.lam))
+        with self._cv:
+            ok = self._cv.wait_for(
+                lambda: self._closed or len(self._q) < limit, timeout
+            )
+            if self._closed:
+                raise ClosedError
+            if not ok:
+                return False
+            self._q.append(item)
+            self._cv.notify_all()
+            return True
+
+    def put_worker(self, item: Any) -> None:
+        """Worker reinsert: always allowed (deadlock prevention)."""
+        with self._cv:
+            if self._closed:
+                raise ClosedError
+            self._q.append(item)
+            self._cv.notify_all()
+
+    def put_front(self, item: Any) -> None:
+        """Head insert (used by the warmup circular flow)."""
+        with self._cv:
+            if self._closed:
+                raise ClosedError
+            self._q.appendleft(item)
+            self._cv.notify_all()
+
+    # -------------------- consumer side -------------------- #
+    def get(self, timeout: Optional[float] = None) -> Any:
+        with self._cv:
+            ok = self._cv.wait_for(lambda: self._closed or self._q, timeout)
+            if self._q:
+                item = self._q.popleft()
+                self._cv.notify_all()
+                return item
+            if self._closed:
+                raise ClosedError
+            if not ok:
+                raise TimeoutError
+            raise AssertionError("unreachable")
+
+    def __len__(self) -> int:
+        with self._cv:
+            return len(self._q)
+
+    @property
+    def fill_fraction(self) -> float:
+        return len(self) / self.capacity
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+
+class BoundedQueue:
+    """Short bounded FIFO for Laminar routers / workers (default len 2)."""
+
+    def __init__(self, capacity: int = 2):
+        self.capacity = capacity
+        self._q: collections.deque = collections.deque()
+        self._cv = threading.Condition()
+        self._closed = False
+
+    def put(self, item: Any, timeout: Optional[float] = None) -> bool:
+        with self._cv:
+            ok = self._cv.wait_for(
+                lambda: self._closed or len(self._q) < self.capacity, timeout
+            )
+            if self._closed:
+                raise ClosedError
+            if not ok:
+                return False
+            self._q.append(item)
+            self._cv.notify_all()
+            return True
+
+    def try_put(self, item: Any) -> bool:
+        with self._cv:
+            if self._closed:
+                raise ClosedError
+            if len(self._q) >= self.capacity:
+                return False
+            self._q.append(item)
+            self._cv.notify_all()
+            return True
+
+    def get(self, timeout: Optional[float] = None) -> Any:
+        with self._cv:
+            ok = self._cv.wait_for(lambda: self._closed or self._q, timeout)
+            if self._q:
+                item = self._q.popleft()
+                self._cv.notify_all()
+                return item
+            if self._closed:
+                raise ClosedError
+            if not ok:
+                raise TimeoutError
+            raise AssertionError("unreachable")
+
+    def __len__(self) -> int:
+        with self._cv:
+            return len(self._q)
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()

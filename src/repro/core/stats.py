@@ -1,0 +1,167 @@
+"""Runtime UDF statistics (§3.3) — collected DURING execution, never a-priori.
+
+Per predicate: EMA cost per row, lottery-based selectivity (tickets =
+rows routed, wins = rows dropped — the Eddy paper's estimator), cache hit
+rate, queue length, and per-worker outstanding-work accounting for the
+data-aware Laminar policy.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+@dataclass
+class Ema:
+    alpha: float = 0.2
+    value: Optional[float] = None
+
+    def update(self, x: float) -> float:
+        self.value = x if self.value is None else (
+            self.alpha * x + (1 - self.alpha) * self.value
+        )
+        return self.value
+
+    def get(self, default: float = 0.0) -> float:
+        return default if self.value is None else self.value
+
+
+@dataclass
+class PredicateStats:
+    name: str
+    cost_per_row: Ema = field(default_factory=lambda: Ema(0.3))
+    tickets: int = 0          # rows routed (lottery tickets)
+    wins: int = 0             # rows filtered out (lottery wins)
+    cache_hits: int = 0
+    cache_probes: int = 0
+    batches: int = 0
+    queue_len: int = 0
+    busy_until: float = 0.0   # simulated-clock resource horizon
+    # content-based routing [Bizarro et al., cited by the paper §2.2]:
+    # per-content-bucket lottery counters
+    bucket_tickets: Dict[int, int] = field(default_factory=dict)
+    bucket_wins: Dict[int, int] = field(default_factory=dict)
+
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    # ------------------------- recording ------------------------- #
+    def record_eval(self, rows_in: int, rows_out: int, seconds: float,
+                    bucket: Optional[int] = None) -> None:
+        with self._lock:
+            self.batches += 1
+            self.tickets += rows_in
+            self.wins += rows_in - rows_out
+            if rows_in > 0:
+                self.cost_per_row.update(seconds / rows_in)
+            if bucket is not None:
+                self.bucket_tickets[bucket] = (
+                    self.bucket_tickets.get(bucket, 0) + rows_in
+                )
+                self.bucket_wins[bucket] = (
+                    self.bucket_wins.get(bucket, 0) + rows_in - rows_out
+                )
+
+    def record_cache(self, probes: int, hits: int) -> None:
+        with self._lock:
+            self.cache_probes += probes
+            self.cache_hits += hits
+
+    # ------------------------- estimates ------------------------- #
+    @property
+    def measured(self) -> bool:
+        return self.batches > 0
+
+    def cost(self, default: float = 1e-3) -> float:
+        return self.cost_per_row.get(default)
+
+    def selectivity(self, default: float = 0.5,
+                    bucket: Optional[int] = None,
+                    min_bucket_tickets: int = 20) -> float:
+        """Fraction of rows that PASS (lottery estimator).
+
+        With ``bucket`` given, uses the content-bucket-specific estimate
+        once it has enough tickets, else falls back to the global one."""
+        with self._lock:
+            if bucket is not None:
+                bt = self.bucket_tickets.get(bucket, 0)
+                if bt >= min_bucket_tickets:
+                    return 1.0 - self.bucket_wins.get(bucket, 0) / bt
+            if self.tickets == 0:
+                return default
+            return 1.0 - self.wins / self.tickets
+
+    def cache_hit_rate(self) -> float:
+        with self._lock:
+            if self.cache_probes == 0:
+                return 0.0
+            return self.cache_hits / self.cache_probes
+
+    def score(self, bucket: Optional[int] = None) -> float:
+        """Classic rank: cost / (1 - selectivity); lower runs first."""
+        sel = self.selectivity(bucket=bucket)
+        return self.cost() / max(1.0 - sel, 1e-6)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "cost_per_row": self.cost(),
+            "selectivity": self.selectivity(),
+            "score": self.score(),
+            "cache_hit_rate": self.cache_hit_rate(),
+            "batches": self.batches,
+        }
+
+
+class StatsBoard:
+    """All predicate stats + per-worker load accounting (one per executor).
+
+    ``cost_alpha`` sets the cost-estimator EMA horizon: small values model
+    long-window averaging (the paper's Fig 9a estimator that "cannot
+    promptly adjust" across cache-boundary segments)."""
+
+    def __init__(self, predicate_names, *, cost_alpha: float = 0.3):
+        self.preds: Dict[str, PredicateStats] = {
+            n: PredicateStats(n, cost_per_row=Ema(cost_alpha))
+            for n in predicate_names
+        }
+        self.worker_load: Dict[str, float] = {}
+        self.proxy_rate = Ema(0.3)  # seconds per proxy unit (data-aware ETA)
+        self.bucket_fn = None       # content-based routing: batch -> bucket id
+        self._lock = threading.Lock()
+
+    def bucket_of(self, batch) -> Optional[int]:
+        if self.bucket_fn is None:
+            return None
+        try:
+            return int(self.bucket_fn(batch))
+        except Exception:
+            return None
+
+    def note_proxy_rate(self, units: float, seconds: float) -> None:
+        if units > 0:
+            with self._lock:
+                self.proxy_rate.update(seconds / units)
+
+    def __getitem__(self, name: str) -> PredicateStats:
+        return self.preds[name]
+
+    def all_measured(self) -> bool:
+        return all(p.measured for p in self.preds.values())
+
+    # ---------------- data-aware load accounting ---------------- #
+    def add_load(self, worker: str, units: float) -> None:
+        with self._lock:
+            self.worker_load[worker] = self.worker_load.get(worker, 0.0) + units
+
+    def finish_load(self, worker: str, units: float) -> None:
+        with self._lock:
+            self.worker_load[worker] = max(
+                0.0, self.worker_load.get(worker, 0.0) - units
+            )
+
+    def load_of(self, worker: str) -> float:
+        with self._lock:
+            return self.worker_load.get(worker, 0.0)
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        return {n: p.snapshot() for n, p in self.preds.items()}

@@ -1,0 +1,103 @@
+"""UDF wrapper: the bridge between Hydro and jitted JAX models (§5.1).
+
+The paper's "batch-agnostic parallelization" problem (variable input dims
+defeat batching; third-party single-image APIs underutilize the GPU) maps to
+TPU/XLA as the RECOMPILATION problem: every new shape compiles a new
+executable. The wrapper therefore (a) canonicalizes spatial dims upstream
+(data/video.crop_to_canonical) and (b) buckets row counts to powers of two,
+so each worker holds a handful of executables that serve any batch.
+
+GACU lazy activation (§5.1): ``ensure_ready`` is only called when the first
+batch is routed to a worker — context allocation is greedy, executable
+compilation + weight residency is conservative.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Sequence
+
+import numpy as np
+
+
+def bucket_rows(n: int, *, minimum: int = 1) -> int:
+    b = max(minimum, 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclass
+class UDF:
+    """A (possibly expensive) ML function over batch columns.
+
+    fn: maps dict[col -> np.ndarray (rows, ...)] -> np.ndarray (rows, ...).
+    cost_model: simulated seconds for `rows` rows (SimClock benchmarks);
+    proxy_cost: data-aware load units for a batch (paper: input size).
+    """
+
+    name: str
+    fn: Callable[[Dict[str, np.ndarray]], np.ndarray]
+    columns: Sequence[str]
+    resource: str = "cpu"                       # e.g. "cpu", "tpu:0"
+    bucket: bool = True
+    warm_fn: Optional[Callable[[], None]] = None  # lazy init (GACU)
+    cost_model: Optional[Callable[[int], float]] = None
+    proxy_cost: Optional[Callable[[Dict[str, np.ndarray]], float]] = None
+    _ready: bool = field(default=False, repr=False)
+
+    def ensure_ready(self) -> None:
+        if not self._ready:
+            if self.warm_fn is not None:
+                self.warm_fn()
+            self._ready = True
+
+    def proxy(self, data: Dict[str, np.ndarray]) -> float:
+        if self.proxy_cost is not None:
+            return float(self.proxy_cost(data))
+        first = data[self.columns[0]]
+        return float(np.asarray(first).size)  # default: input size
+
+    def __call__(self, data: Dict[str, np.ndarray]) -> np.ndarray:
+        self.ensure_ready()
+        cols = {c: np.asarray(data[c]) for c in self.columns}
+        rows = len(next(iter(cols.values())))
+        if rows == 0:
+            probe = self.fn({c: v[:1] for c, v in cols.items()} if rows else cols)
+            return probe[:0] if probe is not None else np.zeros((0,))
+        if not self.bucket:
+            return np.asarray(self.fn(cols))
+        b = bucket_rows(rows)
+        if b != rows:
+            cols = {
+                c: np.concatenate([v, np.repeat(v[:1], b - rows, axis=0)])
+                for c, v in cols.items()
+            }
+        out = np.asarray(self.fn(cols))
+        return out[:rows]
+
+
+@dataclass
+class Predicate:
+    """UDF output -> boolean row mask, e.g. DogBreedClassifier(...) == 'great dane'."""
+
+    name: str
+    udf: UDF
+    compare: Callable[[np.ndarray], np.ndarray]
+    cacheable: bool = True
+
+    @property
+    def resource(self) -> str:
+        return self.udf.resource
+
+    def evaluate_outputs(self, data: Dict[str, np.ndarray]) -> np.ndarray:
+        return self.udf(data)
+
+    def mask_from_outputs(self, outputs: np.ndarray) -> np.ndarray:
+        return np.asarray(self.compare(outputs), bool)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0

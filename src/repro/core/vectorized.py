@@ -1,0 +1,94 @@
+"""TPU-native on-device short-circuit filtering (beyond-paper, DESIGN.md §2).
+
+Host-side Eddy routing costs ~100us/decision — fine for 10-row video batches
+wrapping 30ms UDFs, but unusable inside a serving step that evaluates
+thousands of rows. This module fuses the SAME short-circuit semantics into a
+single jitted program:
+
+  evaluate cheapest predicate on the full batch
+  -> compact the survivors to a static bucket (sort-by-mask: dense compute)
+  -> evaluate the next predicate on the compacted bucket only
+  -> scatter the verdicts back.
+
+Compaction buckets are static shapes (a size ladder) so one executable
+serves any selectivity; the ladder level is picked with ``lax.cond`` on the
+measured survivor count. This is "eager materialization" (§3.3) expressed
+as dense TPU compute.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def compact_indices(mask: jax.Array, bucket: int) -> jax.Array:
+    """Indices of True entries, padded (with n, an OOB sentinel) to bucket."""
+    n = mask.shape[0]
+    idx = jnp.where(mask, jnp.arange(n), n)
+    return jnp.sort(idx)[:bucket]
+
+
+def two_stage_filter(
+    cheap_fn: Callable[[jax.Array], jax.Array],
+    expensive_fn: Callable[[jax.Array], jax.Array],
+    x: jax.Array,
+    *,
+    bucket_fraction: float = 0.5,
+) -> jax.Array:
+    """AND of two predicates with the expensive one on compacted buckets.
+
+    x: (N, ...) rows -> (N,) bool, EXACT for any selectivity: a while_loop
+    keeps evaluating bucket-sized compactions of the not-yet-covered
+    survivors until none remain. The expensive fn is traced ONCE at bucket
+    shape; runtime cost is ceil(survivors / bucket) bucket passes.
+    """
+    n = x.shape[0]
+    bucket = max(1, int(n * bucket_fraction))
+    cheap = cheap_fn(x).astype(bool)                      # (N,)
+    cheapp = jnp.concatenate([cheap, jnp.zeros((1,), bool)])  # sentinel False
+    xpad = jnp.concatenate([x, jnp.zeros_like(x[:1])], axis=0)
+
+    def cond(state):
+        _out, covered = state
+        return jnp.any(cheapp & ~covered)
+
+    def body(state):
+        out, covered = state
+        rest = (cheapp & ~covered)[:n]
+        idx = compact_indices(rest, bucket)               # (bucket,) w/ sentinel n
+        sub = xpad[idx]
+        verdict = expensive_fn(sub).astype(bool)
+        out = out.at[idx].set(verdict)                    # sentinel lands on slot n
+        covered = covered.at[idx].set(True)
+        return out, covered
+
+    out0 = jnp.zeros((n + 1,), bool)
+    cov0 = jnp.zeros((n + 1,), bool).at[n].set(True)
+    out, _ = jax.lax.while_loop(cond, body, (out0, cov0))
+    return cheap & out[:n]
+
+
+def cascade_filter(
+    fns_cheap_to_expensive: Sequence[Callable[[jax.Array], jax.Array]],
+    x: jax.Array,
+    *,
+    bucket_fractions: Sequence[float] | None = None,
+) -> jax.Array:
+    """N-stage cascade: each stage sees only the survivors of the previous.
+
+    Exact (falls back to full evaluation per stage when survivors exceed the
+    bucket), dense, one executable. Stage order should be cheap->expensive —
+    at serve time the caller orders by the Eddy StatsBoard costs, making this
+    the jitted twin of cost-driven routing.
+    """
+    fns = list(fns_cheap_to_expensive)
+    n = x.shape[0]
+    if bucket_fractions is None:
+        bucket_fractions = [0.5] * (len(fns) - 1)
+    mask = fns[0](x).astype(bool)
+    for fn, frac in zip(fns[1:], bucket_fractions):
+        mask = mask & two_stage_filter(lambda _: mask, fn, x, bucket_fraction=frac)
+    return mask

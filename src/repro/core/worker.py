@@ -1,0 +1,167 @@
+"""Predicate workers (§3.2 step 5, §5.1 GACU).
+
+A WorkerContext is pre-created greedily but allocates nothing until the
+first batch is routed to it ("spawning through routing"). Evaluation:
+cache probe -> compute only misses (bucketed) -> mask -> eager
+materialization -> reinsert into the central queue. Timing goes through the
+Clock abstraction so the identical code path runs wall-clock (production)
+or simulated (deterministic scheduling benchmarks).
+"""
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.batch import RoutingBatch
+from repro.core.cache import ReuseCache
+from repro.core.queues import BoundedQueue, CentralQueue, ClosedError
+from repro.core.simclock import SimClock, WallClock
+from repro.core.stats import StatsBoard
+from repro.core.udf import Predicate
+
+
+def evaluate_predicate(
+    pred: Predicate,
+    batch: RoutingBatch,
+    *,
+    stats: StatsBoard,
+    cache: Optional[ReuseCache],
+    clock,
+    worker_id: str,
+    device_group: str,
+    serial_fraction: float = 0.0,
+) -> RoutingBatch:
+    """Evaluate one predicate on one batch; returns the filtered batch."""
+    rows = batch.rows
+    if rows == 0:
+        return batch.mark_visited(pred.name)
+
+    data = {c: batch.data[c] for c in pred.udf.columns}
+    computed_rows = rows
+
+    if cache is not None and pred.cacheable:
+        hits, vals = cache.probe(pred.udf.name, batch.row_ids)
+        stats[pred.name].record_cache(rows, int(hits.sum()))
+        if hits.any():
+            miss = ~hits
+            computed_rows = int(miss.sum())
+            outputs = [None] * rows
+            for i in np.nonzero(hits)[0]:
+                outputs[i] = vals[i]
+            if computed_rows:
+                sub = {c: v[miss] for c, v in data.items()}
+                t0 = time.perf_counter()
+                sub_out = pred.evaluate_outputs(sub)
+                wall = time.perf_counter() - t0
+                cache.put(pred.udf.name, batch.row_ids[miss], sub_out)
+                for j, i in enumerate(np.nonzero(miss)[0]):
+                    outputs[i] = sub_out[j]
+            else:
+                wall = 0.0
+            outputs = np.stack([np.asarray(o) for o in outputs])
+        else:
+            t0 = time.perf_counter()
+            outputs = pred.evaluate_outputs(data)
+            wall = time.perf_counter() - t0
+            cache.put(pred.udf.name, batch.row_ids, outputs)
+    else:
+        t0 = time.perf_counter()
+        outputs = pred.evaluate_outputs(data)
+        wall = time.perf_counter() - t0
+
+    finish = None
+    if isinstance(clock, SimClock):
+        if pred.udf.cost_model is not None:
+            try:
+                # data-aware cost models see the batch columns (UC4: LLM
+                # cost proportional to text length, not just row count)
+                cost = pred.udf.cost_model(computed_rows, data)
+            except TypeError:
+                cost = pred.udf.cost_model(computed_rows)
+        else:
+            cost = wall
+        finish = clock.occupy_shared(
+            worker_id, device_group, cost, serial_fraction, ready=batch.sim_ready
+        )
+        seconds = cost
+    else:
+        seconds = wall
+
+    mask = pred.mask_from_outputs(outputs)
+    out_batch = batch.filter(mask).mark_visited(pred.name)
+    if finish is not None:
+        from dataclasses import replace as _replace
+
+        out_batch = _replace(out_batch, sim_ready=finish)
+    stats[pred.name].record_eval(
+        rows, out_batch.rows, seconds, bucket=stats.bucket_of(batch)
+    )
+    stats.note_proxy_rate(pred.udf.proxy(data), seconds)
+    return out_batch
+
+
+@dataclass
+class WorkerContext:
+    """GACU worker: greedy allocation, conservative (lazy) use."""
+
+    wid: str
+    pred: Predicate
+    central: CentralQueue
+    stats: StatsBoard
+    cache: Optional[ReuseCache]
+    clock: object
+    device_group: str = "cpu"
+    serial_fraction: float = 0.0
+    queue: BoundedQueue = field(default_factory=lambda: BoundedQueue(2))
+    activated: bool = False
+    batches_done: int = 0
+    _thread: Optional[threading.Thread] = None
+    on_error: Optional[object] = None
+
+    def activate(self) -> None:
+        """Called by the Laminar router when the first batch is routed here."""
+        if self.activated:
+            return
+        self.activated = True
+        self.pred.udf.ensure_ready()  # lazy context allocation (GACU)
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"worker-{self.wid}")
+        self._thread.start()
+
+    def submit(self, batch: RoutingBatch, timeout: Optional[float] = None) -> bool:
+        self.activate()
+        return self.queue.put(batch, timeout)
+
+    def _run(self) -> None:
+        while True:
+            try:
+                batch = self.queue.get()
+            except ClosedError:
+                return
+            try:
+                out = evaluate_predicate(
+                    self.pred, batch,
+                    stats=self.stats, cache=self.cache, clock=self.clock,
+                    worker_id=self.wid, device_group=self.device_group,
+                    serial_fraction=self.serial_fraction,
+                )
+                load = self.pred.udf.proxy(
+                    {c: batch.data[c] for c in self.pred.udf.columns}
+                ) if batch.rows else 0.0
+                self.stats.finish_load(self.wid, load)
+                self.batches_done += 1
+                self.central.put_worker(out)
+            except ClosedError:
+                return
+            except Exception as e:  # propagate to the executor
+                if self.on_error is not None:
+                    self.on_error(e, traceback.format_exc())
+                return
+
+    def stop(self) -> None:
+        self.queue.close()

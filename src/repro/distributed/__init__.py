@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (  # noqa: F401
+    TRAIN_RULES,
+    SERVE_RULES,
+    Rules,
+    axis_size,
+    batch_axes,
+    constrain,
+    named_sharding,
+    spec_for,
+)

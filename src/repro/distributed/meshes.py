@@ -1,0 +1,52 @@
+"""Submesh carving: Laminar's device allocation at mesh scale.
+
+The paper's Laminar router assigns UDF workers to GPUs proportionally to
+measured cost. At TPU scale the resource quantum is a mesh SLICE: this
+module splits a mesh's data axis into per-predicate submeshes sized by the
+predicates' measured costs, so concurrent UDF predicates each get a
+data-parallel slice while sharing the model-parallel layout.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+from jax.sharding import Mesh
+
+
+def split_mesh_data_axis(mesh: Mesh, shares: Dict[str, float]) -> Dict[str, Mesh]:
+    """Split the 'data' axis into contiguous slices ~ proportional to shares.
+
+    Every predicate gets >= 1 data row; remainders go to the largest shares.
+    """
+    names = list(shares)
+    axis = mesh.axis_names.index("data")
+    ndata = mesh.devices.shape[axis]
+    total = sum(max(s, 1e-9) for s in shares.values())
+    raw = {n: max(1, int(round(shares[n] / total * ndata))) for n in names}
+    # fix rounding to sum exactly to ndata
+    while sum(raw.values()) > ndata:
+        big = max(raw, key=raw.get)
+        if raw[big] <= 1:
+            break
+        raw[big] -= 1
+    while sum(raw.values()) < ndata:
+        big = max(names, key=lambda n: shares[n] / raw[n])
+        raw[big] += 1
+
+    out: Dict[str, Mesh] = {}
+    start = 0
+    for n in names:
+        take = raw[n]
+        idx = [slice(None)] * mesh.devices.ndim
+        idx[axis] = slice(start, start + take)
+        sub = mesh.devices[tuple(idx)]
+        out[n] = Mesh(sub, mesh.axis_names)
+        start += take
+    return out
+
+
+def cost_shares(costs: Dict[str, float]) -> Dict[str, float]:
+    """Laminar sizing rule: submesh share proportional to measured cost."""
+    total = sum(costs.values()) or 1.0
+    return {k: v / total for k, v in costs.items()}

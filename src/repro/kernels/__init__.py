@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the UDF-side compute hot spots.
+
+Each kernel has a pure-jnp oracle in ref.py (tests assert allclose across
+shape/dtype sweeps) and a public wrapper in ops.py (impl dispatch:
+pallas-on-TPU / interpret-on-CPU / xla oracle for the dry-run FLOPs path).
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines ABOVE this docstring must stay the first two lines of the
+module — jax locks the device count on first init, and the production meshes
+need 512 placeholder devices. Nothing else in the repo sets this flag.
+
+Per cell this prints/records:
+  * compiled.memory_analysis()  — bytes per device (proves it fits)
+  * compiled.cost_analysis()    — FLOPs / bytes for the roofline
+  * the collective schedule parsed from the per-device HLO
+
+Artifacts land in ``results/dryrun/<cell>.json`` (resumable: existing
+artifacts are skipped unless --force). ``--roofline`` additionally lowers
+each family's delta-units (L0/L1) to produce exact totals (see
+roofline/analysis.py for the calibration notes).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --roofline
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, get_config, get_shape  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    SERVE_RULES, TRAIN_RULES, tree_shape_dtypes,
+)
+from repro.launch.mesh import make_production_mesh, mesh_chip_count  # noqa: E402
+from repro.models.layers import ShardCtx  # noqa: E402
+from repro.models.registry import model_api  # noqa: E402
+from repro.optim import AdamW  # noqa: E402
+from repro.roofline import analysis  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+BIG_MODEL_PARAMS = 100e9    # above this, optimizer moments go bf16
+HUGE_MODEL_PARAMS = 250e9   # above this, Adafactor (factored second moment)
+
+
+def choose_optimizer(cfg):
+    from repro.optim import Adafactor
+
+    n = model_api(cfg).param_count(cfg)
+    if n > HUGE_MODEL_PARAMS:
+        return Adafactor()
+    return AdamW(moment_dtype="bfloat16" if n > BIG_MODEL_PARAMS else "float32")
+
+
+def train_overrides(cfg, shape):
+    """Per-cell memory-fit knobs (documented in EXPERIMENTS.md §Dry-run).
+
+    grad_accum == 0 is the explicit "forced off" sentinel used by the
+    roofline unit lowerings (make_train_step treats it as 1)."""
+    if shape.kind == "train" and cfg.d_model >= 2048 and cfg.grad_accum == 1:
+        return dataclasses.replace(cfg, grad_accum=8)
+    return cfg
+
+
+def rules_for(shape):
+    return TRAIN_RULES if shape.kind == "train" else SERVE_RULES
+
+
+def lower_cell(cfg, shape, mesh, *, rules=None, opt=None):
+    """Lower the step for one cell; returns (lowered, donate-info)."""
+    cfg = train_overrides(cfg, shape)
+    api = model_api(cfg)
+    rules = rules or rules_for(shape)
+    ctx = ShardCtx(mesh, rules)
+    pshapes, plogical = api.param_shapes(cfg), api.param_logical(cfg)
+    params_in = tree_shape_dtypes(pshapes, plogical, rules, mesh)
+    inputs = api.input_specs(cfg, shape, mesh, rules)
+
+    if shape.kind == "train":
+        opt = opt or choose_optimizer(cfg)
+        ostate = tree_shape_dtypes(
+            opt.state_shapes(pshapes), opt.state_logical(plogical), rules, mesh
+        )
+        step = api.make_train_step(cfg, opt, ctx)
+        fn = jax.jit(step, donate_argnums=(0, 1))
+        return fn.lower(params_in, ostate, inputs)
+    if shape.kind == "prefill":
+        fn = jax.jit(lambda p, b: api.prefill(cfg, p, b, ctx))
+        return fn.lower(params_in, inputs)
+    # decode
+    cshapes, clogical = api.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    cache_in = tree_shape_dtypes(cshapes, clogical, rules, mesh)
+    fn = jax.jit(lambda p, c, b: api.decode_step(cfg, p, c, b, ctx), donate_argnums=(1,))
+    return fn.lower(params_in, cache_in, inputs)
+
+
+def compile_cell(cfg, shape, mesh, *, default_group: Optional[int] = None):
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    dg = default_group or mesh_chip_count(mesh)
+    sample = analysis.CostSample.from_compiled(compiled, dg, compile_seconds=t2 - t1)
+    return sample, {"lower_s": t1 - t0, "compile_s": t2 - t1}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, roofline: bool,
+             outdir: str, force: bool = False) -> dict:
+    cfg, shape = get_config(arch), get_shape(shape_name)
+    cell_id = f"{arch}__{shape_name}__{mesh_kind}"
+    path = os.path.join(outdir, cell_id + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    ok, reason = cell_applicable(cfg, shape)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "applicable": ok, "reason": reason, "status": "skipped" if not ok else None,
+    }
+    if ok:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+        chips = mesh_chip_count(mesh)
+        try:
+            sample, times = compile_cell(cfg, shape, mesh)
+            record.update(
+                status="ok",
+                chips=chips,
+                times=times,
+                per_device={
+                    "flops_scan_once": sample.flops,
+                    "bytes_scan_once": sample.bytes_accessed,
+                    "wire_bytes_scan_once": sample.wire_bytes,
+                },
+                memory=sample.mem,
+                collectives=sample.collectives,
+            )
+            print(f"[{cell_id}] memory_analysis: {sample.mem}")
+            print(f"[{cell_id}] cost_analysis: flops/dev={sample.flops:.3e} "
+                  f"bytes/dev={sample.bytes_accessed:.3e}")
+            colls = {k: v["count"] for k, v in sample.collectives.items() if v["count"]}
+            print(f"[{cell_id}] collectives: {colls}")
+
+            if roofline and mesh_kind == "singlepod":
+                api = model_api(cfg)
+                # TRUE-STEP accounting: a microbatched train step repeats
+                # the whole pass (incl. FSDP weight gathers) per microbatch
+                # -> lower the pass at the MICRO batch and scale by M.
+                eff = train_overrides(cfg, shape)
+                m = eff.grad_accum if (shape.kind == "train" and eff.grad_accum > 1) else 1
+                pass_shape = (
+                    dataclasses.replace(shape, global_batch=shape.global_batch // m)
+                    if m > 1 else shape
+                )
+                base_cfg, units = api.roofline_units(cfg)
+                # unit lowerings force grad_accum OFF (sentinel 0, which
+                # train_overrides respects): the microbatch scan body is
+                # counted once by cost_analysis (like any scan body)
+                base_cfg = dataclasses.replace(base_cfg, grad_accum=0)
+                units = [(c, dataclasses.replace(u, grad_accum=0)) for c, u in units]
+                base_sample, _ = compile_cell(base_cfg, pass_shape, mesh)
+                unit_samples = []
+                for count, ucfg in units:
+                    us, _ = compile_cell(ucfg, pass_shape, mesh)
+                    unit_samples.append((count, us))
+                totals = analysis.delta_total(base_sample, unit_samples)
+                totals = {k: v * m for k, v in totals.items()}
+                terms = analysis.roofline_terms(
+                    totals["flops"], totals["bytes"], totals["wire"]
+                )
+                terms["accum_factor"] = m
+                mf = analysis.model_flops(cfg, shape)
+                hlo_total = totals["flops"] * chips
+                record["roofline"] = {
+                    "per_device": totals,
+                    "terms": terms,
+                    "model_flops": mf,
+                    "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+                }
+                print(f"[{cell_id}] roofline terms: {terms}")
+        except Exception as e:  # record failures — they are bugs to fix
+            record.update(status="error", error=f"{type(e).__name__}: {e}",
+                          trace=traceback.format_exc()[-4000:])
+            print(f"[{cell_id}] ERROR {type(e).__name__}: {e}")
+
+    os.makedirs(outdir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=float)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["singlepod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--outdir", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    meshes = ["singlepod", "multipod"] if args.mesh == "both" else [args.mesh]
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, roofline=args.roofline,
+                               outdir=args.outdir, force=args.force)
+                if rec.get("status") == "error":
+                    failures += 1
+    print(f"dry-run complete; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

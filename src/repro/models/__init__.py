@@ -1,0 +1,1 @@
+from repro.models.registry import family_module, model_api  # noqa: F401

@@ -1,0 +1,290 @@
+"""Encoder-decoder family (whisper-small).
+
+The conv/mel frontend is a STUB: ``input_specs`` supplies precomputed frame
+embeddings (B, num_frames, d_model). Encoder = bidirectional attention
+blocks; decoder = causal self-attention + cross-attention blocks. Decode
+shapes exercise the decoder with a self-attn KV cache at the requested
+length plus fixed cross-attention K/V over the encoded frames. RoPE stands
+in for the original learned positional embeddings (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Rules, named_sharding
+from repro.models import attention as attn
+from repro.models import transformer as tf
+from repro.models.layers import (
+    NULL_CTX, ShardCtx, dtype_of, embed_tokens, lm_logits, rms_norm,
+    softmax_xent, swiglu_mlp, trunc_normal,
+)
+
+SDS = jax.ShapeDtypeStruct
+
+
+# --------------------------------------------------------------------------- #
+# parameters                                                                   #
+# --------------------------------------------------------------------------- #
+def _enc_layer_shapes(cfg, L):
+    return tf.layer_param_shapes(dataclasses.replace(cfg, num_layers=L))
+
+
+def _dec_layer_shapes(cfg, L):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    dt = dtype_of(cfg)
+    shapes = tf.layer_param_shapes(dataclasses.replace(cfg, num_layers=L))
+    shapes.update(
+        {
+            "xattn_norm": SDS((L, d), dt),
+            "xwq": SDS((L, d, h, hd), dt),
+            "xwk": SDS((L, d, cfg.num_kv_heads, hd), dt),
+            "xwv": SDS((L, d, cfg.num_kv_heads, hd), dt),
+            "xwo": SDS((L, h, hd, d), dt),
+        }
+    )
+    return shapes
+
+
+def _dec_layer_logical(cfg):
+    logical = tf.layer_param_logical(cfg)
+    div = cfg.num_heads % tf.PRODUCTION_MODEL_AXIS == 0
+    adw = "d_model_w" if div else "attn_dw"
+    logical.update(
+        {
+            "xattn_norm": "layers .",
+            "xwq": f"layers {adw} heads .",
+            "xwk": f"layers {adw} kv_heads .",
+            "xwv": f"layers {adw} kv_heads .",
+            "xwo": f"layers heads . {adw}",
+        }
+    )
+    return logical
+
+
+def param_shapes(cfg) -> Dict:
+    d, vp = cfg.d_model, cfg.vocab_padded
+    dt = dtype_of(cfg)
+    return {
+        "embed": SDS((vp, d), dt),
+        "out_head": SDS((d, vp), dt),
+        "final_norm": SDS((d,), dt),
+        "enc_final_norm": SDS((d,), dt),
+        "enc_layers": _enc_layer_shapes(cfg, cfg.num_encoder_layers),
+        "dec_layers": _dec_layer_shapes(cfg, cfg.num_layers),
+    }
+
+
+def param_logical(cfg) -> Dict:
+    return {
+        "embed": "vocab d_model_w",
+        "out_head": "d_model_w vocab",
+        "final_norm": ".",
+        "enc_final_norm": ".",
+        "enc_layers": tf.layer_param_logical(cfg),
+        "dec_layers": _dec_layer_logical(cfg),
+    }
+
+
+def init_params(cfg, key):
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten(shapes)
+    keys = jax.random.split(key, len(flat))
+
+    def mk(k, sds):
+        if sds.shape and len(sds.shape) >= 2:
+            return trunc_normal(k, sds.shape, 0.02, sds.dtype)
+        return jnp.zeros(sds.shape, sds.dtype)
+
+    return jax.tree.unflatten(treedef, [mk(k, s) for k, s in zip(keys, flat)])
+
+
+def param_count(cfg) -> int:
+    return sum(math.prod(s.shape) for s in jax.tree.leaves(param_shapes(cfg)))
+
+
+def active_param_count(cfg) -> int:
+    return param_count(cfg)
+
+
+# --------------------------------------------------------------------------- #
+# forward                                                                      #
+# --------------------------------------------------------------------------- #
+def encode(cfg, params, frames, ctx: ShardCtx):
+    """frames: (B, F, D) stub embeddings -> encoder output (B, F, D)."""
+    h = frames
+    b, f = h.shape[0], h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+
+    def body(carry, lp):
+        hh = carry
+        a_in = rms_norm(hh, lp["attn_norm"], cfg.norm_eps)
+        a_out, _ = attn.attention_train(cfg, a_in, lp, positions, ctx, causal=False)
+        hh = hh + a_out
+        m_in = rms_norm(hh, lp["mlp_norm"], cfg.norm_eps)
+        hh = hh + swiglu_mlp(m_in, lp["w_gate"], lp["w_up"], lp["w_down"], ctx)
+        return hh, None
+
+    h, _ = jax.lax.scan(tf._remat(cfg, body), h, params["enc_layers"])
+    return rms_norm(h, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _dec_block(cfg, lp, h, positions, enc_kv, ctx: ShardCtx):
+    ek, ev = enc_kv
+    a_in = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+    a_out, kv = attn.attention_train(cfg, a_in, lp, positions, ctx)
+    h = h + a_out
+    x_in = rms_norm(h, lp["xattn_norm"], cfg.norm_eps)
+    h = h + attn.cross_attention(cfg, x_in, lp, ek, ev, ctx)
+    m_in = rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+    h = h + swiglu_mlp(m_in, lp["w_gate"], lp["w_up"], lp["w_down"], ctx)
+    return h, kv
+
+
+def _cross_kv(cfg, lp, enc_out, ctx: ShardCtx):
+    dt = enc_out.dtype
+    ek = jnp.einsum("bfd,dhk->bfhk", enc_out, lp["xwk"].astype(dt))
+    ev = jnp.einsum("bfd,dhk->bfhk", enc_out, lp["xwv"].astype(dt))
+    ek = ctx.constrain(ek, "batch frames kv_heads .")
+    ev = ctx.constrain(ev, "batch frames kv_heads .")
+    return ek, ev
+
+
+def forward(cfg, params, batch, ctx: ShardCtx = NULL_CTX):
+    enc_out = encode(cfg, params, batch["frames"].astype(dtype_of(cfg)), ctx)
+    tokens = batch["tokens"]
+    h = embed_tokens(tokens, params["embed"], ctx)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, lp):
+        enc_kv = _cross_kv(cfg, lp, enc_out, ctx)
+        hh, _ = _dec_block(cfg, lp, carry, positions, enc_kv, ctx)
+        return hh, None
+
+    h, _ = jax.lax.scan(tf._remat(cfg, body), h, params["dec_layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_logits(h, params["out_head"], cfg.vocab_size, ctx)
+
+
+def loss_fn(cfg, params, batch, ctx: ShardCtx = NULL_CTX):
+    logits = forward(cfg, params, batch, ctx)
+    loss = softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"loss": loss}
+
+
+def make_train_step(cfg, optimizer, ctx: ShardCtx = NULL_CTX):
+    return tf.make_train_step(cfg, optimizer, ctx, loss=loss_fn)
+
+
+# --------------------------------------------------------------------------- #
+# serving                                                                      #
+# --------------------------------------------------------------------------- #
+def cache_shapes(cfg, batch: int, seq_len: int):
+    L, kv, hd, f = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, cfg.num_frames
+    dt = dtype_of(cfg)
+    shapes = {
+        "k": SDS((L, batch, seq_len, kv, hd), dt),
+        "v": SDS((L, batch, seq_len, kv, hd), dt),
+        "cross_k": SDS((L, batch, f, kv, hd), dt),
+        "cross_v": SDS((L, batch, f, kv, hd), dt),
+        "lengths": SDS((batch,), jnp.int32),
+    }
+    logical = {
+        "k": "layers batch cache_seq kv_heads .",
+        "v": "layers batch cache_seq kv_heads .",
+        "cross_k": "layers batch frames kv_heads .",
+        "cross_v": "layers batch frames kv_heads .",
+        "lengths": "batch",
+    }
+    return shapes, logical
+
+
+def prefill(cfg, params, batch, ctx: ShardCtx = NULL_CTX, pad_cache_to=None):
+    enc_out = encode(cfg, params, batch["frames"].astype(dtype_of(cfg)), ctx)
+    tokens = batch["tokens"]
+    h = embed_tokens(tokens, params["embed"], ctx)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, lp):
+        enc_kv = _cross_kv(cfg, lp, enc_out, ctx)
+        hh, kv = _dec_block(cfg, lp, carry, positions, enc_kv, ctx)
+        return hh, (kv[0], kv[1], enc_kv[0], enc_kv[1])
+
+    h, (ks, vs, eks, evs) = jax.lax.scan(tf._remat(cfg, body), h, params["dec_layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(h[:, -1:], params["out_head"], cfg.vocab_size, ctx)[:, 0]
+    if pad_cache_to is not None and pad_cache_to > ks.shape[2]:
+        pad = pad_cache_to - ks.shape[2]
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {
+        "k": ks, "v": vs, "cross_k": eks, "cross_v": evs,
+        "lengths": jnp.full((b,), s, jnp.int32),
+    }
+    return cache, logits
+
+
+def decode_step(cfg, params, cache, batch, ctx: ShardCtx = NULL_CTX):
+    token = batch["token"]
+    h = embed_tokens(token[:, None], params["embed"], ctx)
+    lengths = cache["lengths"]
+
+    def body(carry, xs):
+        hh = carry
+        lp, ck, cv, ek, ev = xs
+        a_in = rms_norm(hh, lp["attn_norm"], cfg.norm_eps)
+        a_out, nk, nv = attn.decode_attention_block(cfg, a_in, lp, ck, cv, lengths, ctx)
+        hh = hh + a_out
+        x_in = rms_norm(hh, lp["xattn_norm"], cfg.norm_eps)
+        hh = hh + attn.cross_attention(cfg, x_in, lp, ek, ev, ctx)
+        m_in = rms_norm(hh, lp["mlp_norm"], cfg.norm_eps)
+        hh = hh + swiglu_mlp(m_in, lp["w_gate"], lp["w_up"], lp["w_down"], ctx)
+        return hh, (nk, nv)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, h,
+        (params["dec_layers"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]),
+    )
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(h, params["out_head"], cfg.vocab_size, ctx)[:, 0]
+    new_cache = dict(cache, k=ks, v=vs, lengths=lengths + 1)
+    return new_cache, logits
+
+
+# --------------------------------------------------------------------------- #
+# dry-run plumbing                                                             #
+# --------------------------------------------------------------------------- #
+def input_specs(cfg, shape, mesh=None, rules: Rules | None = None) -> Dict[str, SDS]:
+    b, s = shape.global_batch, shape.seq_len
+    dt = dtype_of(cfg)
+
+    def sh(shp, logical, dtype):
+        if mesh is None or rules is None:
+            return SDS(shp, dtype)
+        return SDS(shp, dtype, sharding=named_sharding(shp, logical, rules, mesh))
+
+    if shape.kind == "decode":
+        return {"token": sh((b,), "batch", jnp.int32)}
+    out = {
+        "frames": sh((b, cfg.num_frames, cfg.d_model), "batch frames d_model", dt),
+        "tokens": sh((b, s), "batch seq", jnp.int32),
+    }
+    if shape.kind == "train":
+        out["labels"] = sh((b, s), "batch seq", jnp.int32)
+    return out
+
+
+def roofline_units(cfg):
+    base = dataclasses.replace(cfg, num_layers=0, num_encoder_layers=0,
+                               attention_unroll=True)
+    enc1 = dataclasses.replace(cfg, num_layers=0, num_encoder_layers=1,
+                               attention_unroll=True)
+    dec1 = dataclasses.replace(cfg, num_layers=1, num_encoder_layers=0,
+                               attention_unroll=True)
+    return base, [(cfg.num_encoder_layers, enc1), (cfg.num_layers, dec1)]

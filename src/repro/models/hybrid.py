@@ -1,0 +1,404 @@
+"""Hybrid family (recurrentgemma-9b): Griffin-style RG-LRU + local attention.
+
+Block pattern = (rglru, rglru, local-attn) repeated; remainder layers are
+rglru. The stack is TWO scans — one over (rg, rg, attn) super-blocks, one
+over the remainder rg blocks — so the HLO stays O(1) in depth and the
+roofline delta-lowering gets exact per-super-block costs.
+
+RG-LRU gates use Griffin's block-diagonal linears (nb=16 blocks); the
+recurrence itself is the Pallas kernel (kernels/rglru.py) on TPU and the
+associative-scan oracle on the XLA path. Serving state is O(1): conv tail
+(width-1 inputs) + LRU hidden state + a local-attention ring buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Rules, named_sharding
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models import transformer as tf
+from repro.models.layers import (
+    NULL_CTX, ShardCtx, dtype_of, embed_tokens, lm_logits, rms_norm,
+    softmax_xent, swiglu_mlp, trunc_normal,
+)
+
+SDS = jax.ShapeDtypeStruct
+
+NB = 16          # block-diagonal gate blocks (Griffin)
+CONV_W = 4       # temporal conv width
+RG_C = 8.0       # RG-LRU `c` constant
+
+
+def _counts(cfg):
+    return cfg.num_layers // 3, cfg.num_layers % 3  # (groups, rest rg layers)
+
+
+# --------------------------------------------------------------------------- #
+# parameters                                                                   #
+# --------------------------------------------------------------------------- #
+def _mlp_shapes(cfg, L, dt):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mlp_norm": SDS((L, d), dt),
+        "w_gate": SDS((L, d, f), dt),
+        "w_up": SDS((L, d, f), dt),
+        "w_down": SDS((L, f, d), dt),
+    }
+
+
+_MLP_LOGICAL = {
+    "mlp_norm": "layers .",
+    "w_gate": "layers d_model_w d_ff",
+    "w_up": "layers d_model_w d_ff",
+    "w_down": "layers d_ff d_model_w",
+}
+
+
+def rg_param_shapes(cfg, L):
+    d = cfg.d_model
+    w = cfg.d_model  # lru width == d_model for recurrentgemma
+    dt = dtype_of(cfg)
+    shapes = {
+        "norm": SDS((L, d), dt),
+        "w_x": SDS((L, d, w), dt),
+        "w_g": SDS((L, d, w), dt),
+        "conv_w": SDS((L, w, CONV_W), dt),
+        "conv_b": SDS((L, w), dt),
+        "w_r": SDS((L, NB, w // NB, w // NB), dt),
+        "b_r": SDS((L, w), dt),
+        "w_i": SDS((L, NB, w // NB, w // NB), dt),
+        "b_i": SDS((L, w), dt),
+        "a_param": SDS((L, w), dt),
+        "w_out": SDS((L, w, d), dt),
+    }
+    shapes.update(_mlp_shapes(cfg, L, dt))
+    return shapes
+
+
+RG_LOGICAL = {
+    "norm": "layers .",
+    "w_x": "layers d_model_w lru",
+    "w_g": "layers d_model_w lru",
+    "conv_w": "layers lru conv",
+    "conv_b": "layers lru",
+    "w_r": "layers lru_blocks . .",
+    "b_r": "layers lru",
+    "w_i": "layers lru_blocks . .",
+    "b_i": "layers lru",
+    "a_param": "layers lru",
+    "w_out": "layers lru d_model_w",
+    **_MLP_LOGICAL,
+}
+
+
+def attn_param_shapes(cfg, L):
+    shapes = tf.layer_param_shapes(dataclasses.replace(cfg, num_layers=L))
+    for k in ("mlp_norm", "w_gate", "w_up", "w_down"):
+        pass  # attn layer keeps its own MLP (every Griffin block has one)
+    return shapes
+
+
+def param_shapes(cfg) -> Dict:
+    g, r = _counts(cfg)
+    d, vp = cfg.d_model, cfg.vocab_padded
+    dt = dtype_of(cfg)
+    return {
+        "embed": SDS((vp, d), dt),
+        "out_head": SDS((d, vp), dt),
+        "final_norm": SDS((d,), dt),
+        "groups": {
+            "rg1": rg_param_shapes(cfg, g),
+            "rg2": rg_param_shapes(cfg, g),
+            "attn": attn_param_shapes(cfg, g),
+        },
+        "rest": rg_param_shapes(cfg, r),
+    }
+
+
+def param_logical(cfg) -> Dict:
+    return {
+        "embed": "vocab d_model_w",
+        "out_head": "d_model_w vocab",
+        "final_norm": ".",
+        "groups": {
+            "rg1": RG_LOGICAL,
+            "rg2": RG_LOGICAL,
+            "attn": tf.layer_param_logical(cfg),
+        },
+        "rest": RG_LOGICAL,
+    }
+
+
+def init_params(cfg, key):
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten(shapes)
+    keys = jax.random.split(key, len(flat))
+
+    def mk(k, sds):
+        if sds.shape and len(sds.shape) >= 2:
+            return trunc_normal(k, sds.shape, 0.02, sds.dtype)
+        return jnp.zeros(sds.shape, sds.dtype)
+
+    return jax.tree.unflatten(treedef, [mk(k, s) for k, s in zip(keys, flat)])
+
+
+def param_count(cfg) -> int:
+    return sum(math.prod(s.shape) for s in jax.tree.leaves(param_shapes(cfg)))
+
+
+def active_param_count(cfg) -> int:
+    return param_count(cfg)
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU block                                                                 #
+# --------------------------------------------------------------------------- #
+def _blockdiag(x, w, b):
+    """x (B,S,W) @ block-diagonal (NB, W/NB, W/NB) + b."""
+    bsz, s, wdim = x.shape
+    xb = x.reshape(bsz, s, NB, wdim // NB)
+    y = jnp.einsum("bsnw,nwv->bsnv", xb, w.astype(x.dtype))
+    return y.reshape(bsz, s, wdim) + b.astype(x.dtype)
+
+
+def causal_conv1d(x, w, b, state=None):
+    """Depthwise causal conv. x (B,S,W), w (W,cw). state: (B,cw-1,W) tail."""
+    cw = w.shape[-1]
+    if state is None:
+        pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    out = sum(pad[:, j : j + s] * w[:, j].astype(x.dtype) for j in range(cw))
+    return out + b.astype(x.dtype)
+
+
+def rg_block(cfg, lp, h, ctx: ShardCtx, state=None):
+    """Griffin recurrent block (+MLP). state: None (train) or (conv, h_lru)."""
+    x_in = rms_norm(h, lp["norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x_in, lp["w_g"].astype(x_in.dtype)).astype(jnp.float32)
+    ).astype(x_in.dtype)
+    gate = ctx.constrain(gate, "batch seq lru")
+    xr_raw = jnp.einsum("bsd,dw->bsw", x_in, lp["w_x"].astype(x_in.dtype))
+    xr_raw = ctx.constrain(xr_raw, "batch seq lru")
+
+    conv_state = None if state is None else state["conv"]
+    xr = causal_conv1d(xr_raw, lp["conv_w"], lp["conv_b"], conv_state)
+    r = _blockdiag(xr, lp["w_r"], lp["b_r"])
+    i = _blockdiag(xr, lp["w_i"], lp["b_i"])
+    h0 = None if state is None else state["h"]
+    y, h_last = ops.rglru(
+        xr, r, i, lp["a_param"], h0, c=RG_C, impl=cfg.attention_impl
+    )
+    out = jnp.einsum("bsw,wd->bsd", y * gate, lp["w_out"].astype(y.dtype))
+    out = ctx.constrain(out, "batch seq d_model")
+    h = h + out
+    m_in = rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+    h = h + swiglu_mlp(m_in, lp["w_gate"], lp["w_up"], lp["w_down"], ctx)
+
+    if state is None:
+        return h, None
+    cw = CONV_W
+    tail_src = jnp.concatenate([state["conv"].astype(xr_raw.dtype), xr_raw], axis=1)
+    new_state = {"conv": tail_src[:, -(cw - 1):], "h": h_last}
+    return h, new_state
+
+
+def attn_block(cfg, lp, h, positions, ctx: ShardCtx):
+    a_in = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+    a_out, kv = attn.attention_train(cfg, a_in, lp, positions, ctx, window=cfg.local_window)
+    h = h + a_out
+    m_in = rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+    h = h + swiglu_mlp(m_in, lp["w_gate"], lp["w_up"], lp["w_down"], ctx)
+    return h, kv
+
+
+# --------------------------------------------------------------------------- #
+# forward / loss / train                                                       #
+# --------------------------------------------------------------------------- #
+def _stack(cfg, params, h, positions, ctx):
+    def group_body(carry, gp):
+        hh = carry
+        hh, _ = rg_block(cfg, gp["rg1"], hh, ctx)
+        hh, _ = rg_block(cfg, gp["rg2"], hh, ctx)
+        hh, _ = attn_block(cfg, gp["attn"], hh, positions, ctx)
+        return hh, None
+
+    def rest_body(carry, lp):
+        hh, _ = rg_block(cfg, lp, carry, ctx)
+        return hh, None
+
+    g, r = _counts(cfg)
+    if g:
+        h, _ = jax.lax.scan(tf._remat(cfg, group_body), h, params["groups"])
+    if r:
+        h, _ = jax.lax.scan(tf._remat(cfg, rest_body), h, params["rest"])
+    return h
+
+
+def forward(cfg, params, batch, ctx: ShardCtx = NULL_CTX):
+    tokens = batch["tokens"]
+    h = embed_tokens(tokens, params["embed"], ctx)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = _stack(cfg, params, h, positions, ctx)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_logits(h, params["out_head"], cfg.vocab_size, ctx)
+
+
+def loss_fn(cfg, params, batch, ctx: ShardCtx = NULL_CTX):
+    logits = forward(cfg, params, batch, ctx)
+    loss = softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"loss": loss}
+
+
+def make_train_step(cfg, optimizer, ctx: ShardCtx = NULL_CTX):
+    return tf.make_train_step(cfg, optimizer, ctx, loss=loss_fn)
+
+
+# --------------------------------------------------------------------------- #
+# serving                                                                      #
+# --------------------------------------------------------------------------- #
+def _rg_state_shapes(cfg, L, batch):
+    w = cfg.d_model
+    dt = dtype_of(cfg)
+    shapes = {"conv": SDS((L, batch, CONV_W - 1, w), dt), "h": SDS((L, batch, w), dt)}
+    logical = {"conv": "layers batch . lru", "h": "layers batch lru"}
+    return shapes, logical
+
+
+def cache_shapes(cfg, batch: int, seq_len: int):
+    g, r = _counts(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    win = min(cfg.local_window, seq_len)
+    dt = dtype_of(cfg)
+    rg_s, rg_l = _rg_state_shapes(cfg, g, batch)
+    rest_s, rest_l = _rg_state_shapes(cfg, r, batch)
+    shapes = {
+        "groups": {
+            "rg1": rg_s,
+            "rg2": rg_s,
+            "attn_k": SDS((g, batch, win, kv, hd), dt),
+            "attn_v": SDS((g, batch, win, kv, hd), dt),
+        },
+        "rest": rest_s,
+        "lengths": SDS((batch,), jnp.int32),
+    }
+    logical = {
+        "groups": {
+            "rg1": rg_l,
+            "rg2": rg_l,
+            "attn_k": "layers batch cache_seq kv_heads .",
+            "attn_v": "layers batch cache_seq kv_heads .",
+        },
+        "rest": rest_l,
+        "lengths": "batch",
+    }
+    return shapes, logical
+
+
+def prefill(cfg, params, batch, ctx: ShardCtx = NULL_CTX):
+    tokens = batch["tokens"]
+    h = embed_tokens(tokens, params["embed"], ctx)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    w = cfg.d_model
+    win = min(cfg.local_window, s)
+    zero_state = {
+        "conv": jnp.zeros((b, CONV_W - 1, w), h.dtype),
+        "h": jnp.zeros((b, w), h.dtype),
+    }
+
+    def ring_align(k):
+        keep = k[:, -win:]
+        shift = s % cfg.local_window if s >= cfg.local_window else 0
+        return jnp.roll(keep, shift, axis=1)
+
+    def group_body(carry, gp):
+        hh = carry
+        hh, st1 = rg_block(cfg, gp["rg1"], hh, ctx, zero_state)
+        hh, st2 = rg_block(cfg, gp["rg2"], hh, ctx, zero_state)
+        hh, (k, v) = attn_block(cfg, gp["attn"], hh, positions, ctx)
+        return hh, {"rg1": st1, "rg2": st2,
+                    "attn_k": ring_align(k), "attn_v": ring_align(v)}
+
+    def rest_body(carry, lp):
+        hh, st = rg_block(cfg, lp, carry, ctx, zero_state)
+        return hh, st
+
+    g, r = _counts(cfg)
+    cache = {"lengths": jnp.full((b,), s, jnp.int32)}
+    if g:
+        h, gcache = jax.lax.scan(tf._remat(cfg, group_body), h, params["groups"])
+        cache["groups"] = gcache
+    if r:
+        h, rcache = jax.lax.scan(tf._remat(cfg, rest_body), h, params["rest"])
+        cache["rest"] = rcache
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(h[:, -1:], params["out_head"], cfg.vocab_size, ctx)[:, 0]
+    return cache, logits
+
+
+def _rg_decode(cfg, lp, h, state, ctx):
+    """Single-token rg_block (seq len 1) reusing the train path with state."""
+    return rg_block(cfg, lp, h, ctx, state)
+
+
+def decode_step(cfg, params, cache, batch, ctx: ShardCtx = NULL_CTX):
+    token = batch["token"]
+    h = embed_tokens(token[:, None], params["embed"], ctx)
+    lengths = cache["lengths"]
+
+    def group_body(carry, xs):
+        hh = carry
+        gp, gc = xs
+        hh, st1 = _rg_decode(cfg, gp["rg1"], hh, gc["rg1"], ctx)
+        hh, st2 = _rg_decode(cfg, gp["rg2"], hh, gc["rg2"], ctx)
+        a_in = rms_norm(hh, gp["attn"]["attn_norm"], cfg.norm_eps)
+        a_out, nk, nv = attn.decode_attention_block(
+            cfg, a_in, gp["attn"], gc["attn_k"], gc["attn_v"], lengths, ctx,
+            window=gc["attn_k"].shape[1],
+        )
+        hh = hh + a_out
+        m_in = rms_norm(hh, gp["attn"]["mlp_norm"], cfg.norm_eps)
+        hh = hh + swiglu_mlp(
+            m_in, gp["attn"]["w_gate"], gp["attn"]["w_up"], gp["attn"]["w_down"], ctx
+        )
+        return hh, {"rg1": st1, "rg2": st2, "attn_k": nk, "attn_v": nv}
+
+    def rest_body(carry, xs):
+        lp, st = xs
+        hh, nst = _rg_decode(cfg, lp, carry, st, ctx)
+        return hh, nst
+
+    g, r = _counts(cfg)
+    new_cache = {"lengths": lengths + 1}
+    if g:
+        h, gcache = jax.lax.scan(group_body, h, (params["groups"], cache["groups"]))
+        new_cache["groups"] = gcache
+    if r:
+        h, rcache = jax.lax.scan(rest_body, h, (params["rest"], cache["rest"]))
+        new_cache["rest"] = rcache
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(h, params["out_head"], cfg.vocab_size, ctx)[:, 0]
+    return new_cache, logits
+
+
+# --------------------------------------------------------------------------- #
+# dry-run plumbing                                                             #
+# --------------------------------------------------------------------------- #
+input_specs = tf.input_specs
+
+
+def roofline_units(cfg):
+    g, r = _counts(cfg)
+    base = dataclasses.replace(cfg, num_layers=r, attention_unroll=True)
+    unit = dataclasses.replace(cfg, num_layers=r + 3, attention_unroll=True)
+    return base, [(g, unit)]

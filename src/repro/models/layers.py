@@ -1,0 +1,107 @@
+"""Shared building blocks: RMSNorm, RoPE, SwiGLU MLP, embeddings, ShardCtx.
+
+All model math runs in ``cfg.dtype`` with fp32 norms/softmax; every function
+takes an explicit ``ShardCtx`` (mesh + logical rules) so the same code path
+works on a single CPU device (ctx.mesh None -> no constraints, no shard_map)
+and on the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Rules, constrain, axis_size
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    mesh: Optional[object] = None   # jax.sharding.Mesh
+    rules: Optional[Rules] = None
+
+    def constrain(self, x, logical: str):
+        if self.mesh is None or self.rules is None:
+            return x
+        return constrain(x, logical, self.rules, self.mesh)
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None or name not in self.mesh.axis_names:
+            return 1
+        return axis_size(self.mesh, name)
+
+
+NULL_CTX = ShardCtx()
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu_mlp(x, w_gate, w_up, w_down, ctx: ShardCtx):
+    """(B, S, D) -> (B, S, D); d_ff TP-sharded."""
+    g = jnp.einsum("bsd,df->bsf", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, w_up.astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = ctx.constrain(h, "batch seq d_ff")
+    out = jnp.einsum("bsf,fd->bsd", h, w_down.astype(x.dtype))
+    return ctx.constrain(out, "batch seq d_model")
+
+
+def embed_tokens(tokens, embed, ctx: ShardCtx):
+    out = jnp.take(embed, tokens, axis=0)
+    return ctx.constrain(out, "batch seq d_model")
+
+
+def lm_logits(h, out_head, vocab_size: int, ctx: ShardCtx):
+    """Project to (padded) vocab and mask pad logits to -inf (exact loss)."""
+    logits = jnp.einsum("bsd,dv->bsv", h, out_head.astype(h.dtype))
+    logits = ctx.constrain(logits, "batch seq vocab")
+    vp = out_head.shape[-1]
+    if vp != vocab_size:
+        pad_mask = jnp.arange(vp) >= vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e9, logits)
+    return logits
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean next-token cross-entropy. logits (B,S,V) fp-any, labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ------------------------------ init helpers ------------------------------ #
+def trunc_normal(key, shape, std, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_tree(key, n):
+    return list(jax.random.split(key, n))

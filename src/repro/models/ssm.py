@@ -1,0 +1,298 @@
+"""SSM family (mamba2-370m): attention-free SSD (state-space duality).
+
+Block: in-proj -> depthwise causal conv over [x;B;C] -> SSD (chunked kernel,
+kernels/ssd.py) -> gated RMSNorm -> out-proj. Serving state is O(1) in
+context length: conv tail + (H, P, N) SSM state — this is why mamba2 runs
+the long_500k cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Rules, named_sharding
+from repro.kernels import ops
+from repro.models import transformer as tf
+from repro.models.layers import (
+    NULL_CTX, ShardCtx, dtype_of, embed_tokens, lm_logits, rms_norm,
+    softmax_xent, trunc_normal,
+)
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _dims(cfg):
+    di = cfg.d_inner                  # 2 * d_model
+    h = cfg.ssm_heads                 # di / head_dim
+    p = cfg.ssm_head_dim
+    n = cfg.ssm_state
+    g = cfg.ssm_groups
+    conv_ch = di + 2 * g * n
+    return di, h, p, n, g, conv_ch
+
+
+# --------------------------------------------------------------------------- #
+# parameters                                                                   #
+# --------------------------------------------------------------------------- #
+def layer_param_shapes(cfg) -> Dict[str, SDS]:
+    d, L = cfg.d_model, cfg.num_layers
+    di, h, p, n, g, conv_ch = _dims(cfg)
+    cw = cfg.ssm_conv_width
+    dt = dtype_of(cfg)
+    return {
+        "norm": SDS((L, d), dt),
+        "w_z": SDS((L, d, di), dt),
+        "w_x": SDS((L, d, di), dt),
+        "w_B": SDS((L, d, g * n), dt),
+        "w_C": SDS((L, d, g * n), dt),
+        "w_dt": SDS((L, d, h), dt),
+        "dt_bias": SDS((L, h), dt),
+        "A_log": SDS((L, h), dt),
+        "D_skip": SDS((L, h), dt),
+        "conv_w": SDS((L, conv_ch, cw), dt),
+        "conv_b": SDS((L, conv_ch), dt),
+        "gated_norm": SDS((L, di), dt),
+        "w_out": SDS((L, di, d), dt),
+    }
+
+
+LAYER_LOGICAL = {
+    "norm": "layers .",
+    "w_z": "layers d_model_w ssm_inner",
+    "w_x": "layers d_model_w ssm_inner",
+    "w_B": "layers d_model_w .",
+    "w_C": "layers d_model_w .",
+    "w_dt": "layers d_model_w ssm_heads",
+    "dt_bias": "layers ssm_heads",
+    "A_log": "layers ssm_heads",
+    "D_skip": "layers ssm_heads",
+    "conv_w": "layers . conv",
+    "conv_b": "layers .",
+    "gated_norm": "layers ssm_inner",
+    "w_out": "layers ssm_inner d_model_w",
+}
+
+
+def param_shapes(cfg) -> Dict:
+    d, vp = cfg.d_model, cfg.vocab_padded
+    dt = dtype_of(cfg)
+    return {
+        "embed": SDS((vp, d), dt),
+        "out_head": SDS((d, vp), dt),
+        "final_norm": SDS((d,), dt),
+        "layers": layer_param_shapes(cfg),
+    }
+
+
+def param_logical(cfg) -> Dict:
+    return {
+        "embed": "vocab d_model_w",
+        "out_head": "d_model_w vocab",
+        "final_norm": ".",
+        "layers": LAYER_LOGICAL,
+    }
+
+
+def init_params(cfg, key):
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten(shapes)
+    keys = jax.random.split(key, len(flat))
+
+    def mk(k, sds):
+        if sds.shape and len(sds.shape) >= 2:
+            return trunc_normal(k, sds.shape, 0.02, sds.dtype)
+        return jnp.full(sds.shape, 0.1, sds.dtype)  # A_log/dt_bias benign init
+
+    return jax.tree.unflatten(treedef, [mk(k, s) for k, s in zip(keys, flat)])
+
+
+def param_count(cfg) -> int:
+    return sum(math.prod(s.shape) for s in jax.tree.leaves(param_shapes(cfg)))
+
+
+def active_param_count(cfg) -> int:
+    return param_count(cfg)
+
+
+# --------------------------------------------------------------------------- #
+# block                                                                        #
+# --------------------------------------------------------------------------- #
+def _proj_in(cfg, lp, x_in, ctx):
+    di, h, p, n, g, conv_ch = _dims(cfg)
+    dt = x_in.dtype
+    z = jnp.einsum("bsd,dk->bsk", x_in, lp["w_z"].astype(dt))
+    xi = jnp.einsum("bsd,dk->bsk", x_in, lp["w_x"].astype(dt))
+    Bm = jnp.einsum("bsd,dk->bsk", x_in, lp["w_B"].astype(dt))
+    Cm = jnp.einsum("bsd,dk->bsk", x_in, lp["w_C"].astype(dt))
+    dtv = jnp.einsum("bsd,dk->bsk", x_in, lp["w_dt"].astype(dt))
+    z = ctx.constrain(z, "batch seq ssm_inner")
+    xi = ctx.constrain(xi, "batch seq ssm_inner")
+    return z, xi, Bm, Cm, dtv
+
+
+def _conv_xbc(cfg, lp, xi, Bm, Cm, state=None):
+    """Depthwise causal conv over concat([x, B, C]); returns pieces + tail."""
+    from repro.models.hybrid import causal_conv1d
+
+    di, h, p, n, g, conv_ch = _dims(cfg)
+    xbc = jnp.concatenate([xi, Bm, Cm], axis=-1)   # (B, S, conv_ch)
+    out = causal_conv1d(xbc, lp["conv_w"], lp["conv_b"], state)
+    out = jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype)
+    cw = cfg.ssm_conv_width
+    tail_src = xbc if state is None else jnp.concatenate(
+        [state.astype(xbc.dtype), xbc], axis=1
+    )
+    pad = cw - 1 - tail_src.shape[1]
+    if pad > 0:
+        tail_src = jnp.pad(tail_src, ((0, 0), (pad, 0), (0, 0)))
+    tail = tail_src[:, -(cw - 1):]
+    return out[..., :di], out[..., di : di + g * n], out[..., di + g * n :], tail
+
+
+def ssm_block(cfg, lp, hin, ctx: ShardCtx, state=None):
+    """state: None (train) or {"conv": (B,cw-1,conv_ch), "ssm": (B,H,P,N)}."""
+    di, h, p, n, g, conv_ch = _dims(cfg)
+    b, s, _ = hin.shape
+    x_in = rms_norm(hin, lp["norm"], cfg.norm_eps)
+    z, xi, Bm, Cm, dtv = _proj_in(cfg, lp, x_in, ctx)
+    conv_state = None if state is None else state["conv"]
+    xi, Bm, Cm, tail = _conv_xbc(cfg, lp, xi, Bm, Cm, conv_state)
+
+    dt = jax.nn.softplus(
+        dtv.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32)
+    )                                                 # (B, S, H)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))     # (H,) negative
+    xh = xi.reshape(b, s, h, p)
+    Bh = Bm.reshape(b, s, g, n)
+    Ch = Cm.reshape(b, s, g, n)
+
+    h0 = None if state is None else state["ssm"]
+    y, h_last = ops.ssd(xh, dt, A, Bh, Ch, h0, chunk=min(64, s), impl=cfg.attention_impl)
+    y = y + xh * lp["D_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, lp["gated_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, lp["w_out"].astype(y.dtype))
+    out = ctx.constrain(out, "batch seq d_model")
+    hout = hin + out
+    if state is None:
+        return hout, None
+    return hout, {"conv": tail, "ssm": h_last}
+
+
+def _ssm_decode_block(cfg, lp, hin, ctx, state):
+    """Single-token step using the O(1) recurrent form."""
+    di, h, p, n, g, conv_ch = _dims(cfg)
+    b = hin.shape[0]
+    x_in = rms_norm(hin, lp["norm"], cfg.norm_eps)
+    z, xi, Bm, Cm, dtv = _proj_in(cfg, lp, x_in, ctx)
+    xi1, Bm1, Cm1, tail = _conv_xbc(cfg, lp, xi, Bm, Cm, state["conv"])
+
+    dt = jax.nn.softplus(
+        dtv[:, 0].astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32)
+    )                                                 # (B, H)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    xh = xi1[:, 0].reshape(b, h, p)
+    Bh = Bm1[:, 0].reshape(b, g, n)
+    Ch = Cm1[:, 0].reshape(b, g, n)
+    y, h_new = ops.ssd_decode_step(xh, dt, A, Bh, Ch, state["ssm"])
+    y = y + xh * lp["D_skip"].astype(y.dtype)[None, :, None]
+    y = y.reshape(b, 1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, lp["gated_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, lp["w_out"].astype(y.dtype))
+    return hin + out, {"conv": tail, "ssm": h_new}
+
+
+# --------------------------------------------------------------------------- #
+# forward / loss / serving                                                     #
+# --------------------------------------------------------------------------- #
+def forward(cfg, params, batch, ctx: ShardCtx = NULL_CTX):
+    tokens = batch["tokens"]
+    h = embed_tokens(tokens, params["embed"], ctx)
+
+    def body(carry, lp):
+        hh, _ = ssm_block(cfg, lp, carry, ctx)
+        return hh, None
+
+    h, _ = jax.lax.scan(tf._remat(cfg, body), h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_logits(h, params["out_head"], cfg.vocab_size, ctx)
+
+
+def loss_fn(cfg, params, batch, ctx: ShardCtx = NULL_CTX):
+    logits = forward(cfg, params, batch, ctx)
+    loss = softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"loss": loss}
+
+
+def make_train_step(cfg, optimizer, ctx: ShardCtx = NULL_CTX):
+    return tf.make_train_step(cfg, optimizer, ctx, loss=loss_fn)
+
+
+def cache_shapes(cfg, batch: int, seq_len: int):
+    di, h, p, n, g, conv_ch = _dims(cfg)
+    L, cw = cfg.num_layers, cfg.ssm_conv_width
+    dt = dtype_of(cfg)
+    shapes = {
+        "conv": SDS((L, batch, cw - 1, conv_ch), dt),
+        "ssm": SDS((L, batch, h, p, n), jnp.float32),
+        "lengths": SDS((batch,), jnp.int32),
+    }
+    logical = {
+        "conv": "layers batch . .",
+        "ssm": "layers batch ssm_heads . .",
+        "lengths": "batch",
+    }
+    return shapes, logical
+
+
+def prefill(cfg, params, batch, ctx: ShardCtx = NULL_CTX):
+    tokens = batch["tokens"]
+    h = embed_tokens(tokens, params["embed"], ctx)
+    b, s = tokens.shape
+    di, hh_, p, n, g, conv_ch = _dims(cfg)
+    zero = {
+        "conv": jnp.zeros((b, cfg.ssm_conv_width - 1, conv_ch), h.dtype),
+        "ssm": jnp.zeros((b, hh_, p, n), jnp.float32),
+    }
+
+    def body(carry, lp):
+        hh, st = ssm_block(cfg, lp, carry, ctx, zero)
+        return hh, st
+
+    h, cache = jax.lax.scan(tf._remat(cfg, body), h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(h[:, -1:], params["out_head"], cfg.vocab_size, ctx)[:, 0]
+    cache = dict(cache, lengths=jnp.full((b,), s, jnp.int32))
+    return cache, logits
+
+
+def decode_step(cfg, params, cache, batch, ctx: ShardCtx = NULL_CTX):
+    token = batch["token"]
+    h = embed_tokens(token[:, None], params["embed"], ctx)
+
+    def body(carry, xs):
+        lp, conv, ssm_st = xs
+        hh, nst = _ssm_decode_block(cfg, lp, carry, ctx, {"conv": conv, "ssm": ssm_st})
+        return hh, nst
+
+    h, ncache = jax.lax.scan(body, h, (params["layers"], cache["conv"], cache["ssm"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(h, params["out_head"], cfg.vocab_size, ctx)[:, 0]
+    new_cache = {
+        "conv": ncache["conv"], "ssm": ncache["ssm"], "lengths": cache["lengths"] + 1
+    }
+    return new_cache, logits
+
+
+def input_specs(cfg, shape, mesh=None, rules: Rules | None = None) -> Dict[str, SDS]:
+    return tf.input_specs(cfg, shape, mesh, rules)
+
+
+roofline_units = tf.roofline_units

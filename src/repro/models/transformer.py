@@ -1,0 +1,413 @@
+"""Dense GQA decoder LM + the generic stack machinery reused by moe/vlm.
+
+Scan-over-layers everywhere (keeps HLO size O(1) in depth — required for
+512-device CPU-backend compiles), configurable remat, uniform family API:
+
+  param_shapes / param_logical / init_params / loss_fn / train_step /
+  prefill / decode_step / input_specs / cache_shapes / param_count /
+  roofline_units
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Rules, named_sharding
+from repro.models import attention as attn
+from repro.models.layers import (
+    NULL_CTX,
+    ShardCtx,
+    dtype_of,
+    embed_tokens,
+    lm_logits,
+    rms_norm,
+    rope,
+    softmax_xent,
+    swiglu_mlp,
+    trunc_normal,
+)
+
+SDS = jax.ShapeDtypeStruct
+
+
+# --------------------------------------------------------------------------- #
+# parameter schema (dense)                                                     #
+# --------------------------------------------------------------------------- #
+def layer_param_shapes(cfg) -> Dict[str, SDS]:
+    d, h, kv, hd, f = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_ff
+    L = cfg.num_layers
+    dt = dtype_of(cfg)
+    return {
+        "attn_norm": SDS((L, d), dt),
+        "wq": SDS((L, d, h, hd), dt),
+        "wk": SDS((L, d, kv, hd), dt),
+        "wv": SDS((L, d, kv, hd), dt),
+        "wo": SDS((L, h, hd, d), dt),
+        "mlp_norm": SDS((L, d), dt),
+        "w_gate": SDS((L, d, f), dt),
+        "w_up": SDS((L, d, f), dt),
+        "w_down": SDS((L, f, d), dt),
+    }
+
+
+PRODUCTION_MODEL_AXIS = 16  # launch/mesh.py production mesh
+
+
+def layer_param_logical(cfg) -> Dict[str, str]:
+    # Archs whose head count doesn't divide the model axis (arctic/llava 56,
+    # whisper 12, smollm 9) would REPLICATE their attention projections —
+    # GBs per chip at serve. Shard them on the feature dim instead
+    # ("attn_dw": data at train [= FSDP, unchanged], model at serve).
+    div = cfg.num_heads % PRODUCTION_MODEL_AXIS == 0
+    adw = "d_model_w" if div else "attn_dw"
+    return {
+        "attn_norm": "layers .",
+        "wq": f"layers {adw} heads .",
+        "wk": f"layers {adw} kv_heads .",
+        "wv": f"layers {adw} kv_heads .",
+        "wo": f"layers heads . {adw}",
+        "mlp_norm": "layers .",
+        "w_gate": "layers d_model_w d_ff",
+        "w_up": "layers d_model_w d_ff",
+        "w_down": "layers d_ff d_model_w",
+    }
+
+
+def param_shapes(cfg) -> Dict:
+    d, vp = cfg.d_model, cfg.vocab_padded
+    dt = dtype_of(cfg)
+    out = {
+        "embed": SDS((vp, d), dt),
+        "final_norm": SDS((d,), dt),
+        "layers": layer_param_shapes(cfg),
+    }
+    if not cfg.tie_embeddings:
+        out["out_head"] = SDS((d, vp), dt)
+    if cfg.family == "vlm":
+        out["vision_proj"] = SDS((VISION_FEAT_DIM, d), dt)
+    return out
+
+
+def param_logical(cfg) -> Dict:
+    out = {
+        "embed": "vocab d_model_w",
+        "final_norm": ".",
+        "layers": layer_param_logical(cfg),
+    }
+    if not cfg.tie_embeddings:
+        out["out_head"] = "d_model_w vocab"
+    if cfg.family == "vlm":
+        out["vision_proj"] = ". d_model_w"
+    return out
+
+
+def init_params(cfg, key):
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten(shapes)
+    keys = jax.random.split(key, len(flat))
+    std = 0.02
+
+    def mk(k, sds):
+        if sds.shape and len(sds.shape) >= 2:
+            return trunc_normal(k, sds.shape, std, sds.dtype)
+        return jnp.zeros(sds.shape, sds.dtype)
+
+    return jax.tree.unflatten(treedef, [mk(k, s) for k, s in zip(keys, flat)])
+
+
+def param_count(cfg) -> int:
+    shapes = param_shapes(cfg)
+    import math
+
+    return sum(math.prod(s.shape) for s in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg) -> int:
+    return param_count(cfg)
+
+
+VISION_FEAT_DIM = 1024  # stub frontend feature width (llava patch embeddings)
+
+
+# --------------------------------------------------------------------------- #
+# forward                                                                      #
+# --------------------------------------------------------------------------- #
+def sp_constrain(cfg, h, ctx: ShardCtx):
+    """Megatron-SP (§Perf): inter-block activations shard SEQ over 'model'
+    — 16x smaller residual-stream footprint, so grad accumulation (and its
+    per-microbatch FSDP regathers) becomes unnecessary. GSPMD converts the
+    TP all-reduces at block boundaries into all-gather/reduce-scatter pairs
+    of the same total bytes."""
+    if getattr(cfg, "seq_parallel", False):
+        return ctx.constrain(h, "batch seq_sp d_model")
+    return h
+
+
+def dense_block(cfg, lp, h, positions, ctx: ShardCtx):
+    a_in = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+    a_out, _ = attn.attention_train(
+        cfg, a_in, lp, positions, ctx, window=cfg.sliding_window
+    )
+    h = sp_constrain(cfg, h + a_out, ctx)
+    m_in = rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+    h = h + swiglu_mlp(m_in, lp["w_gate"], lp["w_up"], lp["w_down"], ctx)
+    return sp_constrain(cfg, h, ctx)
+
+
+def _remat(cfg, fn):
+    if not cfg.remat:
+        return fn
+    policy = getattr(jax.checkpoint_policies, "nothing_saveable")
+    name = getattr(cfg, "remat_policy", "nothing")
+    if name == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    elif name == "dots_no_batch":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(fn, policy=policy)
+
+
+def stack_forward(cfg, params, h, positions, ctx: ShardCtx, block_fn=dense_block):
+    def body(carry, lp):
+        return block_fn(cfg, lp, carry, positions, ctx), None
+
+    h, _ = jax.lax.scan(_remat(cfg, body), h, params["layers"])
+    return h
+
+
+def embed_input(cfg, params, batch, ctx: ShardCtx):
+    """Token (+ optional patch) embedding. Returns (h, positions, loss_mask)."""
+    tokens = batch["tokens"]
+    h = embed_tokens(tokens, params["embed"], ctx)
+    b, s = tokens.shape
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(h.dtype)  # (B, P, VISION_FEAT_DIM)
+        pe = jnp.einsum("bpf,fd->bpd", patches, params["vision_proj"].astype(h.dtype))
+        pe = ctx.constrain(pe, "batch seq d_model")
+        h = jnp.concatenate([pe, h], axis=1)
+        s = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return h, positions
+
+
+def forward(cfg, params, batch, ctx: ShardCtx = NULL_CTX, block_fn=dense_block):
+    h, positions = embed_input(cfg, params, batch, ctx)
+    h = stack_forward(cfg, params, h, positions, ctx, block_fn)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["out_head"]
+    return lm_logits(h, head, cfg.vocab_size, ctx)
+
+
+def loss_fn(cfg, params, batch, ctx: ShardCtx = NULL_CTX, block_fn=dense_block):
+    logits = forward(cfg, params, batch, ctx, block_fn)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if cfg.family == "vlm":
+        # image patch positions carry no next-token loss
+        p = cfg.num_patches
+        logits = logits[:, p:]
+    loss = softmax_xent(logits, labels, mask)
+    return loss, {"loss": loss}
+
+
+def make_train_step(cfg, optimizer, ctx: ShardCtx = NULL_CTX, block_fn=dense_block,
+                    loss=None):
+    """Returns train_step(params, opt_state, batch).
+
+    cfg.grad_accum > 1 runs gradient-accumulation microbatching: the global
+    batch is split on its leading dim and scanned, so per-microbatch
+    activations (and the per-layer remat carries) shrink by the accumulation
+    factor — this is what fits the 100B+ archs on a 256-chip pod.
+    """
+    loss = loss or partial(loss_fn, block_fn=block_fn)
+    accum = max(1, getattr(cfg, "grad_accum", 1))
+    acc_dt = jnp.dtype(getattr(cfg, "grad_accum_dtype", "float32"))
+
+    def _grad(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss(cfg, p, batch, ctx), has_aux=True
+        )(params)
+
+    def train_step(params, opt_state, batch):
+        if accum <= 1:
+            (l, metrics), grads = _grad(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch,
+            )
+            micro = jax.tree.map(
+                lambda x: ctx.constrain(x, ". batch" + " ." * (x.ndim - 2)), micro
+            )
+
+            def mb(carry, mbatch):
+                gsum, lsum = carry
+                (l, _m), g = _grad(params, mbatch)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), gsum, g
+                )
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (gsum, lsum), _ = jax.lax.scan(mb, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            l = lsum / accum
+            metrics = {"loss": l}
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = optimizer.global_norm(grads)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------------------- #
+# serving                                                                      #
+# --------------------------------------------------------------------------- #
+def cache_len(cfg, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def cache_dtype_of(cfg):
+    """KV-cache storage dtype (§Perf: fp8 cache halves decode cache reads;
+    the attend path upcasts, so it is a storage-only change)."""
+    cd = getattr(cfg, "cache_dtype", "")
+    return jnp.dtype(cd) if cd else dtype_of(cfg)
+
+
+def cache_shapes(cfg, batch: int, seq_len: int):
+    L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    s = cache_len(cfg, seq_len)
+    dt = cache_dtype_of(cfg)
+    shapes = {
+        "k": SDS((L, batch, s, kv, hd), dt),
+        "v": SDS((L, batch, s, kv, hd), dt),
+        "lengths": SDS((batch,), jnp.int32),
+    }
+    logical = {
+        "k": "layers batch cache_seq kv_heads .",
+        "v": "layers batch cache_seq kv_heads .",
+        "lengths": "batch",
+    }
+    return shapes, logical
+
+
+def prefill(cfg, params, batch, ctx: ShardCtx = NULL_CTX, block_fn=dense_block,
+            pad_cache_to: int | None = None):
+    """Run the full prompt; returns (cache, last-position logits).
+
+    ``pad_cache_to`` reserves decode headroom: the returned cache's seq dim
+    is padded to that length (ring-buffer SWA caches are fixed-size and
+    ignore it)."""
+    h, positions = embed_input(cfg, params, batch, ctx)
+    w = cfg.sliding_window
+
+    def body(carry, lp):
+        hh = carry
+        a_in = rms_norm(hh, lp["attn_norm"], cfg.norm_eps)
+        a_out, (k, v) = attn.attention_train(cfg, a_in, lp, positions, ctx, window=w)
+        hh = hh + a_out
+        m_in = rms_norm(hh, lp["mlp_norm"], cfg.norm_eps)
+        hh = hh + swiglu_mlp(m_in, lp["w_gate"], lp["w_up"], lp["w_down"], ctx)
+        if w:
+            # ring-buffer layout: slot = position % window
+            s = k.shape[1]
+            keep = min(w, s)
+            k = k[:, -keep:]
+            v = v[:, -keep:]
+            shift = s % w if s >= w else 0
+            k = jnp.roll(k, shift, axis=1)
+            v = jnp.roll(v, shift, axis=1)
+        k = ctx.constrain(k.astype(cache_dtype_of(cfg)), "batch cache_seq kv_heads .")
+        v = ctx.constrain(v.astype(cache_dtype_of(cfg)), "batch cache_seq kv_heads .")
+        return hh, (k, v)
+
+    h, (ks, vs) = jax.lax.scan(_remat(cfg, body), h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["out_head"]
+    logits = lm_logits(h[:, -1:], head, cfg.vocab_size, ctx)[:, 0]
+    b, s = h.shape[0], h.shape[1]
+    if pad_cache_to is not None and not w and pad_cache_to > ks.shape[2]:
+        pad = pad_cache_to - ks.shape[2]
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {
+        "k": ks,
+        "v": vs,
+        "lengths": jnp.full((b,), s, jnp.int32),
+    }
+    return cache, logits
+
+
+def decode_step(cfg, params, cache, batch, ctx: ShardCtx = NULL_CTX,
+                mlp_fn=None):
+    """One token for every sequence. batch: {"token": (B,) int32}."""
+    token = batch["token"]
+    b = token.shape[0]
+    h = embed_tokens(token[:, None], params["embed"], ctx)  # (B, 1, D)
+    lengths = cache["lengths"]
+    w = cfg.sliding_window
+
+    def body(carry, xs):
+        hh = carry
+        lp, ck, cv = xs
+        a_in = rms_norm(hh, lp["attn_norm"], cfg.norm_eps)
+        a_out, nk, nv = attn.decode_attention_block(
+            cfg, a_in, lp, ck, cv, lengths, ctx, window=w
+        )
+        hh = hh + a_out
+        m_in = rms_norm(hh, lp["mlp_norm"], cfg.norm_eps)
+        if mlp_fn is None:
+            hh = hh + swiglu_mlp(m_in, lp["w_gate"], lp["w_up"], lp["w_down"], ctx)
+        else:
+            hh = hh + mlp_fn(cfg, lp, m_in, ctx)
+        return hh, (nk, nv)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], cache["k"], cache["v"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["out_head"]
+    logits = lm_logits(h, head, cfg.vocab_size, ctx)[:, 0]
+    new_cache = {"k": ks, "v": vs, "lengths": lengths + 1}
+    return new_cache, logits
+
+
+# --------------------------------------------------------------------------- #
+# dry-run plumbing                                                             #
+# --------------------------------------------------------------------------- #
+def input_specs(cfg, shape, mesh=None, rules: Rules | None = None) -> Dict[str, SDS]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape cell."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = dtype_of(cfg)
+
+    def sh(shp, logical, dtype):
+        if mesh is None or rules is None:
+            return SDS(shp, dtype)
+        return SDS(shp, dtype, sharding=named_sharding(shp, logical, rules, mesh))
+
+    if shape.kind == "decode":
+        return {"token": sh((b,), "batch", jnp.int32)}
+    text = s
+    out = {}
+    if cfg.family == "vlm":
+        text = s - cfg.num_patches
+        out["patches"] = sh((b, cfg.num_patches, VISION_FEAT_DIM), "batch patches .", dt)
+    out["tokens"] = sh((b, text), "batch seq", jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = sh((b, text), "batch seq", jnp.int32)
+    return out
+
+
+def roofline_units(cfg):
+    """(base_cfg, [(count, unit_cfg)]): cost(cfg) = cost(base) + sum count*(cost(unit)-cost(base)).
+
+    Unit configs unroll the attention q-chunking so XLA counts every chunk
+    (map bodies are counted once by cost_analysis — calibrated)."""
+    base = dataclasses.replace(cfg, num_layers=0, attention_unroll=True)
+    unit = dataclasses.replace(cfg, num_layers=1, attention_unroll=True)
+    return base, [(cfg.num_layers, unit)]

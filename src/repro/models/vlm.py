@@ -1,0 +1,23 @@
+"""VLM family (llava-next-34b): dense GQA backbone + stub anyres frontend.
+
+Per the assignment, the modality frontend is a STUB: ``input_specs`` supplies
+precomputed patch embeddings (B, num_patches, 1024) which a learned
+``vision_proj`` maps into the token stream ahead of the text tokens. The
+backbone is exactly the dense decoder (transformer.py) — decode/serving is
+identical once the prefix is in the KV cache.
+"""
+from repro.models import transformer as tf
+
+param_shapes = tf.param_shapes
+param_logical = tf.param_logical
+init_params = tf.init_params
+param_count = tf.param_count
+active_param_count = tf.active_param_count
+forward = tf.forward
+loss_fn = tf.loss_fn
+make_train_step = tf.make_train_step
+prefill = tf.prefill
+decode_step = tf.decode_step
+input_specs = tf.input_specs
+cache_shapes = tf.cache_shapes
+roofline_units = tf.roofline_units

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, Adafactor, cosine_schedule, constant_schedule  # noqa: F401
+from repro.optim.compression import Int8ErrorFeedback, compressed_psum  # noqa: F401

@@ -1,0 +1,190 @@
+"""Optimizers: AdamW (+ dtype-configurable moments) and Adafactor.
+
+Optimizer state shards identically to the parameters (ZeRO-equivalent under
+the FSDPxTP rules); ``moment_dtype="bfloat16"`` halves optimizer HBM for the
+480B-class models. Updates are returned (not applied) so train_step controls
+the parameter dtype cast.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def _tree_global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+@dataclass(frozen=True)
+class AdamW:
+    schedule: Callable = field(default_factory=lambda: constant_schedule(1e-3))
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+    def init(self, params):
+        mdt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def state_shapes(self, param_shapes):
+        """ShapeDtypeStruct tree mirroring init() (for the dry-run)."""
+        mdt = jnp.dtype(self.moment_dtype)
+        z = lambda s: jax.ShapeDtypeStruct(s.shape, mdt)
+        return {
+            "m": jax.tree.map(z, param_shapes),
+            "v": jax.tree.map(z, param_shapes),
+            "count": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def state_logical(self, param_logical):
+        return {
+            "m": param_logical,
+            "v": param_logical,
+            "count": "",  # scalar
+        }
+
+    def global_norm(self, tree):
+        return _tree_global_norm(tree)
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        gnorm = _tree_global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9)) if self.clip_norm else 1.0
+        lr = self.schedule(count)
+        b1, b2 = self.b1, self.b2
+        mdt = jnp.dtype(self.moment_dtype)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            mhat = m32 / (1 - b1 ** count.astype(jnp.float32))
+            vhat = v32 / (1 - b2 ** count.astype(jnp.float32))
+            u = -lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                       + self.weight_decay * p.astype(jnp.float32))
+            return u, m32.astype(mdt), v32.astype(mdt)
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        flat_p = jax.tree.leaves(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return updates, {"m": new_m, "v": new_v, "count": count}
+
+
+@dataclass(frozen=True)
+class Adafactor:
+    """Factored second moments for >=2D params: O(sum dims) optimizer HBM."""
+
+    schedule: Callable = field(default_factory=lambda: constant_schedule(1e-3))
+    decay: float = 0.99
+    eps: float = 1e-30
+    clip_norm: float = 1.0
+
+    def _factored(self, p) -> bool:
+        return p.ndim >= 2
+
+    def init(self, params):
+        def z(p):
+            if self._factored(p):
+                return {
+                    "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(z, params), "count": jnp.zeros((), jnp.int32)}
+
+    def state_shapes(self, param_shapes):
+        def z(p):
+            if len(p.shape) >= 2:
+                return {
+                    "row": jax.ShapeDtypeStruct(p.shape[:-1], jnp.float32),
+                    "col": jax.ShapeDtypeStruct(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jax.ShapeDtypeStruct(p.shape, jnp.float32)}
+
+        return {
+            "f": jax.tree.map(z, param_shapes),
+            "count": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def state_logical(self, param_logical):
+        from repro.distributed.sharding import parse_dims
+
+        def z(logical):
+            dims = parse_dims(logical)
+            if len(dims) >= 2:
+                row = " ".join(d or "." for d in dims[:-1])
+                col = " ".join(d or "." for d in (dims[:-2] + dims[-1:]))
+                return {"row": row, "col": col}
+            return {"v": logical}
+
+        return {"f": jax.tree.map(z, param_logical), "count": ""}
+
+    def global_norm(self, tree):
+        return _tree_global_norm(tree)
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        gnorm = _tree_global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9)) if self.clip_norm else 1.0
+        lr = self.schedule(count)
+        d = self.decay
+
+        def upd(g, f):
+            g = g.astype(jnp.float32) * scale
+            g2 = g * g + self.eps
+            if "row" in f:
+                row = d * f["row"] + (1 - d) * jnp.mean(g2, axis=-1)
+                col = d * f["col"] + (1 - d) * jnp.mean(g2, axis=-2)
+                rms = jnp.sqrt(
+                    row[..., :, None] * col[..., None, :]
+                    / jnp.maximum(jnp.mean(row, axis=-1, keepdims=True)[..., None], self.eps)
+                )
+                u = -lr * g / jnp.maximum(rms, 1e-12)
+                return u, {"row": row, "col": col}
+            v = d * f["v"] + (1 - d) * g2
+            return -lr * g / jnp.sqrt(jnp.maximum(v, 1e-12)), {"v": v}
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_f = [
+            dict(zip(("row", "col"), x)) if isinstance(x, tuple) else x
+            for x in jax.tree.leaves(
+                state["f"], is_leaf=lambda n: isinstance(n, dict) and ("row" in n or "v" in n)
+            )
+        ]
+        out = [upd(g, f) for g, f in zip(flat_g, flat_f)]
+        updates = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_f = jax.tree.unflatten(tdef, [o[1] for o in out])
+        return updates, {"f": new_f, "count": count}

@@ -1,0 +1,11 @@
+"""TPU v5e hardware constants (per chip) for the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW_PER_LINK = 50e9        # B/s per link (per the assignment)
+
+CHIP = {
+    "peak_flops_bf16": PEAK_FLOPS_BF16,
+    "hbm_bw": HBM_BW,
+    "ici_bw_per_link": ICI_BW_PER_LINK,
+}

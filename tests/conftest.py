@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests see the REAL device count (1 CPU device) — the 512-device flag is
+# set ONLY inside launch/dryrun.py (and subprocess tests that exec it).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

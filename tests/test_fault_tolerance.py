@@ -1,0 +1,55 @@
+"""Straggler watchdog + heartbeat + failure injector unit tests."""
+import os
+
+from repro.distributed.fault_tolerance import (
+    FailureInjector, Heartbeat, StepWatchdog,
+)
+
+
+def test_watchdog_flags_stragglers():
+    wd = StepWatchdog(k=5.0, min_samples=5)
+    events = []
+    wd.on_straggler = events.append
+    for _ in range(20):
+        wd.observe(0.100)
+    ev = wd.observe(1.0)  # 10x slower
+    assert ev is not None and ev.seconds == 1.0
+    assert events and events[0].threshold < 1.0
+
+
+def test_watchdog_tolerates_noise():
+    import random
+
+    random.seed(0)
+    wd = StepWatchdog(k=6.0)
+    for _ in range(100):
+        assert wd.observe(0.1 + random.uniform(-0.005, 0.005)) is None
+
+
+def test_watchdog_window_adapts():
+    """After a regime change (persistently slower), the envelope adapts:
+    flags fire during the transition, then stop once the window turns over."""
+    wd = StepWatchdog(k=5.0, window=20)
+    for _ in range(20):
+        wd.observe(0.1)
+    flags = [wd.observe(0.3) is not None for _ in range(40)]
+    assert any(flags[:20])          # transition is flagged
+    assert not any(flags[20:])      # adapted after a full window
+
+
+def test_failure_injector_fires_once():
+    inj = FailureInjector([3])
+    inj.check(1); inj.check(2)
+    import pytest
+
+    with pytest.raises(RuntimeError):
+        inj.check(3)
+    inj.check(3)  # second pass: already consumed
+    assert inj.failures == 1
+
+
+def test_heartbeat(tmp_path):
+    hb = Heartbeat(os.path.join(tmp_path, "hb"))
+    hb.beat(42)
+    content = open(os.path.join(tmp_path, "hb")).read()
+    assert content.startswith("42 ")

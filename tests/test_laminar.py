@@ -1,0 +1,113 @@
+"""Laminar router: GACU lazy activation, backpressure scaling, data-aware
+load balancing, device-alternating placement (§5)."""
+import time
+
+import numpy as np
+
+from repro.core import (
+    AQPExecutor, CostDriven, DataAware, DeviceAlternating, Predicate,
+    RoundRobin, SimClock, UDF, make_batch,
+)
+
+
+def _pred(name, *, sleep=0.0, cost=None, resource="cpu", proxy=None):
+    def fn(d):
+        if sleep:
+            time.sleep(sleep)
+        return np.ones(len(d["x"]), bool)
+
+    udf = UDF(name + "_udf", fn=fn, columns=("x",), resource=resource,
+              cost_model=cost, proxy_cost=proxy)
+    return Predicate(name, udf, compare=lambda o: o.astype(bool))
+
+
+def _batches(n, per=10, widths=None):
+    out = []
+    for i in range(0, n, per):
+        w = widths[i // per] if widths is not None else 4
+        out.append(make_batch({"x": np.ones((per, w))}, np.arange(i, i + per)))
+    return out
+
+
+def test_gacu_lazy_activation():
+    """Contexts are pre-created (greedy) but only activate when routed to
+    (conservative): a fast predicate should not wake all 50 workers."""
+    p = _pred("p")
+    ex = AQPExecutor([p], max_workers=50, warmup=False)
+    ex.collect(iter(_batches(50)))
+    lam = ex.laminars["p"]
+    assert len(lam.workers) == 50                 # greedy allocation
+    active = sum(1 for w in lam.workers if w.activated)
+    assert 1 <= active < 50                       # conservative use
+
+
+def test_gacu_warm_fn_called_once_per_activated_worker():
+    calls = []
+
+    def warm():
+        calls.append(1)
+
+    udf = UDF("u", fn=lambda d: np.ones(len(d["x"]), bool), columns=("x",),
+              warm_fn=warm)
+    p = Predicate("p", udf, compare=lambda o: o)
+    ex = AQPExecutor([p], max_workers=4, warmup=False)
+    ex.collect(iter(_batches(40)))
+    # lazy init happens on first routed batch; shared UDF warms once
+    assert len(calls) == 1
+
+
+def test_scale_up_under_backpressure():
+    """Slow predicate + many batches -> the router activates more workers."""
+    p = _pred("p", sleep=0.01)
+    ex = AQPExecutor([p], max_workers=8, warmup=False)
+    ex.collect(iter(_batches(200)))
+    assert ex.active_worker_counts()["p"] >= 2
+
+
+def test_data_aware_beats_round_robin_fig14():
+    """UC4 reproduction: heavy-tailed batch costs -> data-aware load
+    balancing yields a shorter simulated makespan than round-robin.
+
+    Review length is encoded as ROW COUNT so it drives both the simulated
+    cost and the data-aware proxy (input size) — 'longer reviews cost more'.
+    """
+    def run(policy_factory, seed):
+        rng = np.random.default_rng(seed)
+        widths = np.clip(rng.lognormal(2.0, 1.0, 40), 1, 200).astype(int)
+        clk = SimClock()
+        udf = UDF("llm_udf", fn=lambda d: np.ones(len(d["x"]), bool),
+                  columns=("x",), cost_model=lambda rows: float(rows),
+                  bucket=False)
+        p = Predicate("llm", udf, compare=lambda o: o.astype(bool))
+        ex = AQPExecutor([p], clock=clk, warmup=False, max_workers=4,
+                         laminar_policy_factory=policy_factory)
+        batches = [
+            make_batch({"x": np.ones((int(w), 1))},
+                       np.arange(i * 1000, i * 1000 + int(w)))
+            for i, w in enumerate(widths)
+        ]
+        n_rows = sum(int(w) for w in widths)
+        got = sum(b.rows for b in ex.run(iter(batches)))
+        assert got == n_rows
+        return ex.makespan
+
+    # the paper reports medians of repeated runs (pipeline queues randomize
+    # order); do the same — single runs have scheduler-startup variance
+    t_rr = np.median([run(RoundRobin, s) for s in (1, 2, 3)])
+    t_da = np.median([run(DataAware, s) for s in (1, 2, 3)])
+    assert t_da < t_rr * 0.9, f"expected >10% win, got {t_rr/t_da:.3f}x"
+
+
+def test_device_alternating_spreads_devices():
+    clk = SimClock()
+    udf = UDF("u", fn=lambda d: np.ones(len(d["x"]), bool), columns=("x",),
+              cost_model=lambda rows: 0.01 * rows)
+    p = Predicate("p", udf, compare=lambda o: o.astype(bool))
+    ex = AQPExecutor(
+        [p], clock=clk, warmup=False, max_workers=4,
+        laminar_policy_factory=DeviceAlternating,
+        devices={"p": ("tpu:0", "tpu:1")},
+    )
+    ex.collect(iter(_batches(100)))
+    groups = {w.device_group for w in ex.laminars["p"].workers if w.activated}
+    assert groups == {"tpu:0", "tpu:1"}

@@ -1,0 +1,160 @@
+"""Property-based tests (hypothesis) for the system's invariants.
+
+The headline invariant is the paper's no-accuracy-tradeoff claim: for ANY
+predicate costs/selectivities/policies/batch sizes, the AQP result set
+EQUALS naive conjunctive evaluation.
+"""
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    AQPExecutor, CostDriven, DataAware, HydroPolicy, Predicate, ReuseAware,
+    ReuseCache, RoundRobin, ScoreDriven, SelectivityDriven, SimClock, UDF,
+    make_batch,
+)
+from repro.core.stats import PredicateStats
+from repro.core.udf import bucket_rows
+from repro.core.queues import CentralQueue
+
+POLICIES = [CostDriven, ScoreDriven, SelectivityDriven, HydroPolicy, ReuseAware]
+
+slow = settings(
+    max_examples=20, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@st.composite
+def aqp_case(draw):
+    n_rows = draw(st.integers(10, 80))
+    n_preds = draw(st.integers(1, 4))
+    per = draw(st.sampled_from([3, 7, 10, 16]))
+    thresholds = [draw(st.floats(-2.0, 2.0)) for _ in range(n_preds)]
+    costs = [draw(st.floats(1e-4, 5e-3)) for _ in range(n_preds)]
+    policy = draw(st.sampled_from(POLICIES))
+    lam_policy = draw(st.sampled_from([RoundRobin, DataAware]))
+    seed = draw(st.integers(0, 2**16))
+    use_cache = draw(st.booleans())
+    use_sim = draw(st.booleans())
+    return n_rows, n_preds, per, thresholds, costs, policy, lam_policy, seed, use_cache, use_sim
+
+
+@given(aqp_case())
+@slow
+def test_aqp_equals_naive_evaluation(case):
+    (n_rows, n_preds, per, thresholds, costs, policy, lam_policy, seed,
+     use_cache, use_sim) = case
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n_rows).astype(np.float64)
+
+    preds = []
+    for i, (t, c) in enumerate(zip(thresholds, costs)):
+        udf = UDF(
+            f"u{i}", fn=lambda d, tt=t: d["x"] * 1.0, columns=("x",),
+            resource=f"r{i}", cost_model=(lambda rows, cc=c: rows * cc),
+        )
+        preds.append(Predicate(f"p{i}", udf, compare=lambda o, tt=t: o > tt))
+
+    naive = np.ones(n_rows, bool)
+    for t in thresholds:
+        naive &= x > t
+    expect = set(np.nonzero(naive)[0].tolist())
+
+    batches = [
+        make_batch({"x": x[i : i + per]}, np.arange(i, min(i + per, n_rows)))
+        for i in range(0, n_rows, per)
+    ]
+    ex = AQPExecutor(
+        preds,
+        policy=policy(),
+        laminar_policy_factory=lam_policy,
+        cache=ReuseCache() if use_cache else None,
+        clock=SimClock() if use_sim else None,
+        max_workers=3,
+    )
+    got = {int(i) for b in ex.run(iter(batches)) for i in b.row_ids}
+    assert got == expect
+
+
+@given(
+    tickets=st.integers(1, 10_000),
+    wins=st.integers(0, 10_000),
+)
+@settings(max_examples=50, deadline=None)
+def test_lottery_selectivity_bounds(tickets, wins):
+    wins = min(wins, tickets)
+    st_ = PredicateStats("p")
+    st_.tickets, st_.wins, st_.batches = tickets, wins, 1
+    sel = st_.selectivity()
+    assert 0.0 <= sel <= 1.0
+    assert abs(sel - (1 - wins / tickets)) < 1e-12
+    assert st_.score() >= 0.0
+
+
+@given(st.integers(0, 1 << 20))
+@settings(max_examples=50, deadline=None)
+def test_bucket_rows_properties(n):
+    b = bucket_rows(max(n, 1))
+    assert b >= max(n, 1)
+    assert b < 2 * max(n, 1) or b == 1
+    assert (b & (b - 1)) == 0  # power of two
+
+
+@given(
+    lam=st.floats(0.05, 1.0),
+    cap=st.integers(1, 64),
+    items=st.integers(0, 100),
+)
+@settings(max_examples=30, deadline=None)
+def test_watermark_invariant(lam, cap, items):
+    q = CentralQueue(capacity=cap, lam=lam)
+    limit = max(1, int(cap * lam))
+    accepted = 0
+    for i in range(items):
+        if q.put_pull(i, timeout=0.0):
+            accepted += 1
+    assert accepted == min(items, limit)
+    # worker inserts always succeed
+    for i in range(5):
+        q.put_worker(i)
+    assert len(q) == accepted + 5
+
+
+@given(
+    mask=st.lists(st.booleans(), min_size=1, max_size=64),
+)
+@settings(max_examples=30, deadline=None)
+def test_batch_filter_semantics(mask):
+    mask = np.asarray(mask, bool)
+    n = len(mask)
+    b = make_batch({"x": np.arange(n), "y": np.arange(n) * 2.0}, np.arange(n))
+    f = b.filter(mask)
+    assert f.rows == int(mask.sum())
+    np.testing.assert_array_equal(f.row_ids, np.nonzero(mask)[0])
+    np.testing.assert_array_equal(f.data["x"] * 2.0, f.data["y"])
+    assert f.bid == b.bid and f.visited == b.visited
+
+
+@given(
+    k=st.sampled_from([1, 2, 4]),
+    t=st.integers(1, 64),
+    e=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=30, deadline=None)
+def test_moe_router_invariants(k, t, e, seed):
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+
+    k = min(k, e)
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.standard_normal((t, e)), jnp.float32)
+    w, idx = ref.moe_topk_router(logits, k)
+    w, idx = np.asarray(w), np.asarray(idx)
+    np.testing.assert_allclose(w.sum(-1), 1.0, rtol=1e-5)  # renormalized
+    assert (w >= 0).all()
+    assert ((0 <= idx) & (idx < e)).all()
+    for row in idx:
+        assert len(set(row.tolist())) == k  # distinct experts

@@ -1,0 +1,100 @@
+"""Central-queue watermark + deadlock-prevention tests (§3.3)."""
+import threading
+import time
+
+import pytest
+
+from repro.core.queues import BoundedQueue, CentralQueue, ClosedError
+
+
+def test_lambda_watermark_blocks_pull():
+    q = CentralQueue(capacity=10, lam=0.3)  # pull limit = 3
+    assert q.put_pull(1, timeout=0.05)
+    assert q.put_pull(2, timeout=0.05)
+    assert q.put_pull(3, timeout=0.05)
+    assert not q.put_pull(4, timeout=0.05)  # watermark reached
+
+
+def test_worker_reinsert_always_allowed():
+    q = CentralQueue(capacity=10, lam=0.3)
+    for i in range(3):
+        q.put_pull(i, timeout=0.05)
+    # workers may exceed the watermark freely (deadlock prevention)
+    for i in range(7):
+        q.put_worker(100 + i)
+    assert len(q) == 10
+
+
+def test_no_deadlock_under_full_cycle():
+    """Producer at watermark + workers reinserting + consumer draining:
+    the cycle must make progress (the paper's deadlock scenario)."""
+    q = CentralQueue(capacity=6, lam=0.3)
+    done = threading.Event()
+    consumed = []
+
+    def producer():
+        for i in range(50):
+            while not q.put_pull(i, timeout=0.02):
+                pass
+        done.set()
+
+    def consumer():
+        while not (done.is_set() and len(q) == 0):
+            try:
+                item = q.get(timeout=0.02)
+            except TimeoutError:
+                continue
+            if isinstance(item, int) and item < 1000:
+                q.put_worker(item + 1000)  # simulate worker reinsert
+            else:
+                consumed.append(item)
+
+    t1 = threading.Thread(target=producer)
+    t2 = threading.Thread(target=consumer)
+    t1.start(); t2.start()
+    t1.join(timeout=10)
+    t2.join(timeout=10)
+    assert done.is_set() and len(consumed) == 50
+
+
+def test_pull_blocked_until_drained():
+    q = CentralQueue(capacity=10, lam=0.3)
+    for i in range(3):
+        q.put_pull(i)
+    ok = []
+
+    def delayed_get():
+        time.sleep(0.05)
+        q.get()
+
+    t = threading.Thread(target=delayed_get)
+    t.start()
+    ok.append(q.put_pull(99, timeout=1.0))  # unblocks after the get
+    t.join()
+    assert ok == [True]
+
+
+def test_close_raises():
+    q = CentralQueue()
+    q.close()
+    with pytest.raises(ClosedError):
+        q.put_pull(1)
+    with pytest.raises(ClosedError):
+        q.get()
+
+
+def test_close_drains_remaining():
+    q = BoundedQueue(4)
+    q.put(1); q.put(2)
+    q.close()
+    assert q.get() == 1 and q.get() == 2
+    with pytest.raises(ClosedError):
+        q.get()
+
+
+def test_bounded_queue_capacity():
+    q = BoundedQueue(2)
+    assert q.try_put(1) and q.try_put(2)
+    assert not q.try_put(3)
+    q.get()
+    assert q.try_put(3)

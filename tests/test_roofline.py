@@ -1,0 +1,80 @@
+"""Roofline accounting units: HLO collective parsing, ring multipliers,
+delta totals, analytic model FLOPs."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_shape
+from repro.roofline import analysis, hw
+
+HLO = """
+ENTRY %main {
+  %ar = bf16[16,688]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[256,1024]{1,0} all-gather(%y), replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = bf16[8,128]{1,0} reduce-scatter(%z), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %a2a = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%u, %v), replica_groups={{0,1}}
+  %cp = bf16[32]{0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+  %ars = bf16[16,688]{1,0} all-reduce-start(%x2), replica_groups={{0,1,2,3}}
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    out = analysis.parse_collectives(HLO, default_group=256)
+    assert out["all-reduce"]["count"] == 2           # incl. -start form
+    assert out["all-gather"]["count"] == 1
+    assert out["reduce-scatter"]["count"] == 1
+    assert out["all-to-all"]["count"] == 1
+    assert out["collective-permute"]["count"] == 1
+    # all-reduce result bytes: 16*688*2 each
+    assert out["all-reduce"]["result_bytes"] == 2 * 16 * 688 * 2
+    # group sizes: AR group 4 -> wire = 2*(3/4)*R
+    ar_r = 16 * 688 * 2
+    assert out["all-reduce"]["wire_bytes"] == pytest.approx(2 * ar_r * 2 * 3 / 4)
+    # all-gather iota group [16,16] -> size 16
+    ag_r = 256 * 1024 * 4
+    assert out["all-gather"]["wire_bytes"] == pytest.approx(ag_r * 15 / 16)
+    # reduce-scatter: wire = R*(n-1), n=8
+    rs_r = 8 * 128 * 2
+    assert out["reduce-scatter"]["wire_bytes"] == pytest.approx(rs_r * 7)
+    # tuple all-to-all: both result tensors counted
+    assert out["all-to-all"]["result_bytes"] == 2 * 4 * 4 * 4
+
+
+def test_wire_multiplier_degenerate_group():
+    assert analysis.wire_multiplier("all-reduce", 1) == 0.0
+    assert analysis.wire_multiplier("collective-permute", 4) == 1.0
+
+
+def test_delta_total():
+    base = analysis.CostSample(flops=10.0, bytes_accessed=100.0, wire_bytes=5.0)
+    unit = analysis.CostSample(flops=13.0, bytes_accessed=140.0, wire_bytes=7.0)
+    tot = analysis.delta_total(base, [(32, unit)])
+    assert tot["flops"] == 10 + 32 * 3
+    assert tot["bytes"] == 100 + 32 * 40
+    assert tot["wire"] == 5 + 32 * 2
+
+
+def test_roofline_terms_dominance():
+    t = analysis.roofline_terms(hw.PEAK_FLOPS_BF16, 0.0, 0.0)
+    assert t["dominant"] == "compute_s" and t["roofline_fraction"] == 1.0
+    t2 = analysis.roofline_terms(hw.PEAK_FLOPS_BF16, hw.HBM_BW * 2, 0.0)
+    assert t2["dominant"] == "memory_s"
+    assert t2["roofline_fraction"] == pytest.approx(0.5)
+
+
+def test_model_flops_kinds():
+    cfg = get_config("llama3-8b")
+    train = analysis.model_flops(cfg, get_shape("train_4k"))
+    prefill = analysis.model_flops(cfg, get_shape("prefill_32k"))
+    decode = analysis.model_flops(cfg, get_shape("decode_32k"))
+    assert train == pytest.approx(3 * prefill)       # same tokens, 6ND vs 2ND
+    assert decode < prefill / 1000                   # one token per sequence
+
+
+def test_moe_model_flops_uses_active():
+    cfg = get_config("arctic-480b")
+    from repro.models.registry import model_api
+
+    mf = analysis.model_flops(cfg, get_shape("train_4k"))
+    n_act = model_api(cfg).active_param_count(cfg)
+    assert mf == pytest.approx(6.0 * n_act * get_shape("train_4k").tokens)

@@ -1,0 +1,47 @@
+"""Discrete-event simulated clock semantics (core/simclock.py)."""
+from repro.core.simclock import SimClock, WallClock
+
+
+def test_occupy_serializes_per_resource():
+    c = SimClock()
+    assert c.occupy("r", 2.0) == 2.0
+    assert c.occupy("r", 3.0) == 5.0
+    assert c.makespan == 5.0
+
+
+def test_occupy_shared_overlap_and_ready():
+    c = SimClock()
+    # two workers overlap fully when serial_fraction=0
+    f1 = c.occupy_shared("w1", "dev", 4.0, 0.0, ready=0.0)
+    f2 = c.occupy_shared("w2", "dev", 4.0, 0.0, ready=0.0)
+    assert f1 == 4.0 and f2 == 4.0
+
+    # serial_fraction=0.5 gates the device: third job waits for dev horizon
+    c2 = SimClock()
+    c2.occupy_shared("a", "dev", 4.0, 0.5, ready=0.0)   # dev busy to 2
+    c2.occupy_shared("b", "dev", 4.0, 0.5, ready=0.0)   # starts at 2
+    f = c2.occupy_shared("c", "dev", 4.0, 0.5, ready=0.0)
+    assert f == 4.0 + 4.0  # start 4 (dev free), +4
+
+
+def test_ready_time_not_global_now():
+    """Virtual start uses the batch's ready time, NOT the advanced clock —
+    thread interleaving must not distort the timeline."""
+    c = SimClock()
+    c.occupy_shared("w1", "d1", 10.0, 0.0, ready=0.0)   # now = 10
+    f = c.occupy_shared("w2", "d2", 1.0, 0.0, ready=2.0)
+    assert f == 3.0  # starts at its ready time, not at now=10
+
+
+def test_busy_time_accounting():
+    c = SimClock()
+    c.occupy_shared("w", "dev", 4.0, 0.25, ready=0.0)
+    assert c.busy_time("w") == 4.0
+    assert c.busy_time("dev") == 1.0
+
+
+def test_wallclock_monotonic():
+    w = WallClock()
+    a = w.now()
+    w.sleep(0.001)
+    assert w.now() >= a

@@ -1,0 +1,74 @@
+"""StatsBoard / PredicateStats / ReuseCache unit tests (§3.3, §4.3)."""
+import os
+
+import numpy as np
+
+from repro.core import ReuseCache
+from repro.core.stats import Ema, PredicateStats, StatsBoard
+
+
+def test_ema_converges():
+    e = Ema(alpha=0.5)
+    for _ in range(20):
+        e.update(10.0)
+    assert abs(e.get() - 10.0) < 1e-6
+
+
+def test_cost_per_row_ema():
+    st = PredicateStats("p")
+    st.record_eval(10, 5, seconds=0.1)   # 10ms/row
+    st.record_eval(10, 5, seconds=0.3)   # 30ms/row
+    assert 0.01 < st.cost() < 0.03       # EMA between the two
+
+
+def test_lottery_selectivity():
+    st = PredicateStats("p")
+    st.record_eval(100, 25, seconds=0.1)
+    assert st.selectivity() == 0.25
+    st.record_eval(100, 75, seconds=0.1)
+    assert st.selectivity() == 0.5
+
+
+def test_score_formula():
+    st = PredicateStats("p")
+    st.record_eval(100, 50, 100 * 0.002)  # cost 2ms/row, sel 0.5
+    assert abs(st.score() - 0.002 / 0.5) < 1e-9
+
+
+def test_worker_load_accounting():
+    sb = StatsBoard(["p"])
+    sb.add_load("w0", 10.0)
+    sb.add_load("w0", 5.0)
+    sb.finish_load("w0", 10.0)
+    assert sb.load_of("w0") == 5.0
+    sb.finish_load("w0", 99.0)
+    assert sb.load_of("w0") == 0.0  # clamped
+
+
+def test_cache_probe_put():
+    c = ReuseCache()
+    ids = np.array([1, 5, 9])
+    hits, _ = c.probe("udf", ids)
+    assert not hits.any()
+    c.put("udf", ids, np.array([10.0, 50.0, 90.0]))
+    hits, vals = c.probe("udf", np.array([5, 6, 9]))
+    np.testing.assert_array_equal(hits, [True, False, True])
+    assert vals[0] == 50.0 and vals[2] == 90.0
+    assert c.hit_rate("udf", np.array([1, 2, 3, 5])) == 0.5
+
+
+def test_cache_disk_roundtrip(tmp_path):
+    path = os.path.join(tmp_path, "cache.npz")
+    c = ReuseCache(path)
+    c.put("udf", np.arange(4), np.arange(4) * 2.0)
+    c.flush()
+    c2 = ReuseCache(path)
+    hits, vals = c2.probe("udf", np.array([2, 3]))
+    assert hits.all() and vals[0] == 4.0 and vals[1] == 6.0
+
+
+def test_cache_vector_values():
+    c = ReuseCache()
+    c.put("udf", np.array([7]), np.ones((1, 4)))
+    hits, vals = c.probe("udf", np.array([7]))
+    assert hits.all() and vals[0].shape == (4,)

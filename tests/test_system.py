@@ -1,0 +1,125 @@
+"""End-to-end behaviour tests: the paper's UC1 query (Listing 2) over
+synthetic video, through the full plan -> AQP pipeline, validated against
+planted ground truth — the no-accuracy-tradeoff claim, end to end."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostDriven, Predicate, Query, ReuseCache, TrivialPredicate, UDF, optimize,
+)
+from repro.core.policies import EDDY_POLICIES
+from repro.data.video import (
+    BREEDS, SyntheticVideo, classify_color_batch, crop_to_canonical,
+)
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def video():
+    return SyntheticVideo(num_frames=120, seed=3)
+
+
+def detection_source(video, chunk=32):
+    """Scan + ObjectDetector + UNNEST + label='dog' filter + Crop — the
+    upstream of the AQP executor in Fig. 3b."""
+    dogs = [o for o in video.objects if o.label == "dog"]
+    for i in range(0, len(dogs), chunk):
+        part = dogs[i : i + chunk]
+        crops = np.stack(
+            [crop_to_canonical(video.crop(o.frame_id, o.bbox)) for o in part]
+        ).astype(np.float32)
+        yield {
+            "crop": crops,
+            "frame_id": np.array([o.frame_id for o in part]),
+            "breed_gt": np.array([BREEDS.index(o.breed) for o in part]),
+            "_row_id": np.arange(i, i + len(part)),
+        }
+
+
+def make_predicates(video, breed="great dane", color="black"):
+    # DogBreedClassifier stand-in: real compute (HSV kernel features) + the
+    # planted label column — deterministic, cost-realistic.
+    def breed_fn(d):
+        _hist, _ = ops.hsv_color_classify(d["crop"], impl="xla")
+        return d["breed_gt"]
+
+    breed_udf = UDF("DogBreedClassifier", breed_fn, columns=("crop", "breed_gt"),
+                    resource="tpu:0")
+    p_breed = Predicate(
+        "breed", breed_udf, compare=lambda o: o == BREEDS.index(breed)
+    )
+
+    def color_fn(d):
+        return np.array([c for c in classify_color_batch(d["crop"])], object)
+
+    color_udf = UDF("DogColorClassifier", color_fn, columns=("crop",),
+                    resource="cpu", bucket=False)
+    p_color = Predicate("color", color_udf, compare=lambda o: o == color)
+    return p_breed, p_color
+
+
+@pytest.mark.parametrize("policy", sorted(EDDY_POLICIES))
+def test_uc1_query_all_policies(video, policy):
+    p_breed, p_color = make_predicates(video)
+    q = Query(source=detection_source(video), predicates=[p_breed, p_color])
+    plan = optimize(q, executor_kwargs=dict(
+        policy=EDDY_POLICIES[policy](), max_workers=2,
+    ))
+    rows = plan.collect_rows()
+
+    dogs = [o for o in video.objects if o.label == "dog"]
+    crops = np.stack(
+        [crop_to_canonical(video.crop(o.frame_id, o.bbox)) for o in dogs]
+    ).astype(np.float32)
+    colors = classify_color_batch(crops)
+    expect = {
+        i for i, (o, c) in enumerate(zip(dogs, colors))
+        if o.breed == "great dane" and c == "black"
+    }
+    assert set(rows["_row_id"].tolist()) == expect
+    assert len(expect) > 0  # planted data guarantees matches
+
+
+def test_uc1_no_reordering_same_answer(video):
+    p_breed, p_color = make_predicates(video)
+    q = Query(source=detection_source(video), predicates=[p_breed, p_color])
+    static = optimize(q, aqp=False).collect_rows()
+    q2 = Query(source=detection_source(video), predicates=[p_breed, p_color])
+    adaptive = optimize(q2).collect_rows()
+    assert set(static["_row_id"].tolist()) == set(adaptive["_row_id"].tolist())
+
+
+def test_uc2_cache_across_queries(video):
+    """Second identical query with a shared cache mostly reuses results.
+
+    Hit rate < 1.0 is expected: rows dropped by the OTHER predicate in pass
+    1 were never evaluated here (partial caches — exactly the premise of the
+    paper's UC2 reuse-aware routing)."""
+    cache = ReuseCache()
+    results, stats = [], None
+    for i in range(2):
+        p_breed, p_color = make_predicates(video)
+        q = Query(source=detection_source(video), predicates=[p_breed, p_color])
+        # fixed order both passes: this test is about CACHE semantics, so
+        # the (wall-clock-dependent) routing order must not vary between
+        # passes — reuse-aware ROUTING has its own tests/benchmarks.
+        plan = optimize(q, cache=cache, aqp=False,
+                        executor_kwargs=dict(max_workers=2))
+        results.append(set(plan.collect_rows()["_row_id"].tolist()))
+        stats = plan.executor.stats_snapshot()
+    assert results[0] == results[1]  # reuse never changes the answer
+    assert stats["breed"]["cache_hit_rate"] >= 0.95  # first pred: full reuse
+    assert stats["color"]["cache_hit_rate"] >= 0.95  # same order -> same rows
+
+
+def test_trivial_pushdown():
+    src = [{"x": np.arange(10.0), "rating": np.arange(10),
+            "_row_id": np.arange(10)}]
+    udf = UDF("u", fn=lambda d: d["x"], columns=("x",))
+    p = Predicate("p", udf, compare=lambda o: o >= 0)
+    q = Query(source=iter(src), predicates=[p],
+              trivial=[TrivialPredicate("rating", "<=", 3)], batch_rows=4)
+    plan = optimize(q, executor_kwargs=dict(max_workers=1))
+    rows = plan.collect_rows()
+    assert set(rows["_row_id"].tolist()) == {0, 1, 2, 3}
+    assert any("TrivialPushdown" in d for d in plan.description)
