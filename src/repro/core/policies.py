@@ -35,6 +35,24 @@ from repro.core.stats import StatsBoard
 from repro.core.udf import Predicate
 
 
+# Rank-estimate resolution (Adaptive Cost Model line of work): run-time
+# statistics are noisy estimators, so two predicates whose true statistics
+# are EQUAL will report values that differ by estimator noise (the lottery
+# selectivity estimator drifts by ~1/tickets per batch). Ranking on the raw
+# floats makes the predicate order flip nondeterministically mid-run at
+# degenerate (tied) statistics. Policies therefore quantize selectivity to
+# this resolution inside their sort keys — well above the noise floor, well
+# below any meaningful selectivity difference — and break the resulting
+# ties deterministically (cost, then name). Point estimates returned by
+# ``PredicateStats`` stay exact; only rank keys quantize.
+SEL_RESOLUTION = 1.0 / 64.0
+
+
+def _sel_key(sel: float, resolution: float = SEL_RESOLUTION) -> float:
+    """Selectivity as a rank key: quantized so noise-level differences tie."""
+    return round(sel / resolution) * resolution
+
+
 class EddyPolicy:
     name = "base"
 
@@ -50,7 +68,13 @@ class CostDriven(EddyPolicy):
         return stats[p.name].cost()
 
     def rank(self, batch, preds, stats, cache):
-        return sorted(preds, key=lambda p: self.est_cost(batch, p, stats, cache))
+        # deterministic tie-break: equal-cost predicates order by
+        # (quantized) selectivity — drop more rows first — then by name.
+        return sorted(preds, key=lambda p: (
+            self.est_cost(batch, p, stats, cache),
+            _sel_key(stats[p.name].selectivity()),
+            p.name,
+        ))
 
 
 class ReuseAware(CostDriven):
@@ -68,14 +92,24 @@ class ScoreDriven(EddyPolicy):
     name = "score"
 
     def rank(self, batch, preds, stats, cache):
-        return sorted(preds, key=lambda p: stats[p.name].score())
+        return sorted(preds, key=lambda p: (
+            stats[p.name].score(resolution=SEL_RESOLUTION),
+            stats[p.name].cost(),
+            p.name,
+        ))
 
 
 class SelectivityDriven(EddyPolicy):
     name = "selectivity"
 
     def rank(self, batch, preds, stats, cache):
-        return sorted(preds, key=lambda p: stats[p.name].selectivity())
+        # quantized selectivity first; at a tie the cheaper predicate runs
+        # first (the only well-defined order at degenerate statistics).
+        return sorted(preds, key=lambda p: (
+            _sel_key(stats[p.name].selectivity()),
+            stats[p.name].cost(),
+            p.name,
+        ))
 
 
 class ContentBased(EddyPolicy):
@@ -96,7 +130,11 @@ class ContentBased(EddyPolicy):
         if stats.bucket_fn is None:
             stats.bucket_fn = self.bucket_fn  # wire the eval-side recording
         b = stats.bucket_of(batch)
-        return sorted(preds, key=lambda p: stats[p.name].score(bucket=b))
+        return sorted(preds, key=lambda p: (
+            stats[p.name].score(bucket=b, resolution=SEL_RESOLUTION),
+            stats[p.name].cost(),
+            p.name,
+        ))
 
 
 class HydroPolicy(EddyPolicy):

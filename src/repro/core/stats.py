@@ -97,9 +97,17 @@ class PredicateStats:
                 return 0.0
             return self.cache_hits / self.cache_probes
 
-    def score(self, bucket: Optional[int] = None) -> float:
-        """Classic rank: cost / (1 - selectivity); lower runs first."""
+    def score(self, bucket: Optional[int] = None,
+              resolution: Optional[float] = None) -> float:
+        """Classic rank: cost / (1 - selectivity); lower runs first.
+
+        ``resolution`` quantizes the selectivity estimate before scoring so
+        rank keys tie at degenerate (noise-level-equal) statistics instead
+        of flipping on estimator drift — the policies pass their rank
+        resolution here to keep this formula the single source of truth."""
         sel = self.selectivity(bucket=bucket)
+        if resolution:
+            sel = round(sel / resolution) * resolution
         return self.cost() / max(1.0 - sel, 1e-6)
 
     def snapshot(self) -> Dict[str, float]:
@@ -120,6 +128,7 @@ class StatsBoard:
     promptly adjust" across cache-boundary segments)."""
 
     def __init__(self, predicate_names, *, cost_alpha: float = 0.3):
+        self.cost_alpha = cost_alpha
         self.preds: Dict[str, PredicateStats] = {
             n: PredicateStats(n, cost_per_row=Ema(cost_alpha))
             for n in predicate_names

@@ -14,7 +14,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import launch
 
 NEG_INF = -1e30
 
@@ -73,7 +74,7 @@ def decode_attention_bkgd(
     num_kv_heads: int,
     scale: float | None = None,
     block_k: int = 256,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     bh, g, d = q.shape
     s = k_cache.shape[1]
@@ -86,13 +87,14 @@ def decode_attention_bkgd(
     kernel = functools.partial(
         _decode_kernel, scale=scale, block_k=block_k, num_kv_blocks=nk
     )
-    return pl.pallas_call(
+    return launch.pallas_call(
         kernel,
+        name="decode_attention",
         grid=(bh, nk),
         in_specs=[
             pl.BlockSpec(
                 (1, 1), lambda b, ki, h=num_kv_heads: (b // h, 0),
-                memory_space=pltpu.SMEM,
+                memory_space=launch.SMEM,
             ),
             pl.BlockSpec((1, g, d), lambda b, ki: (b, 0, 0)),
             pl.BlockSpec((1, block_k, d), lambda b, ki: (b, ki, 0)),
@@ -101,12 +103,11 @@ def decode_attention_bkgd(
         out_specs=pl.BlockSpec((1, g, d), lambda b, ki: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, g, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((g, d), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
+            launch.VMEM((g, d), jnp.float32),
+            launch.VMEM((g, 1), jnp.float32),
+            launch.VMEM((g, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
-        ),
+        dimension_semantics=("parallel", "arbitrary"),
         interpret=interpret,
+        rows=bh * g,
     )(lengths2d, q, k_cache, v_cache)

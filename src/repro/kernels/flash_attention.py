@@ -17,7 +17,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import launch
 
 NEG_INF = -1e30
 
@@ -98,7 +99,7 @@ def flash_attention_bhsd(
     scale: float | None = None,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     bh, sq, d = q.shape
     sk = k.shape[1]
@@ -114,8 +115,9 @@ def flash_attention_bhsd(
         block_q=block_q, block_k=block_k, num_kv_blocks=nk,
     )
     grid = (bh, nq, nk)
-    return pl.pallas_call(
+    return launch.pallas_call(
         kernel,
+        name="flash_attention",
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
@@ -125,12 +127,11 @@ def flash_attention_bhsd(
         out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((block_q, d), jnp.float32),
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, 1), jnp.float32),
+            launch.VMEM((block_q, d), jnp.float32),
+            launch.VMEM((block_q, 1), jnp.float32),
+            launch.VMEM((block_q, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
+        rows=bh * sq,
     )(q, k, v)

@@ -13,7 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import launch
 
 
 def _hsv_kernel(
@@ -65,7 +66,7 @@ def hsv_color_hist(
     ranges: jax.Array,  # (C, 6) lo/hi HSV
     *,
     block_rows: int = 64,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     b, hh, ww, _ = crops.shape
     c = ranges.shape[0]
@@ -76,8 +77,9 @@ def hsv_color_hist(
     kernel = functools.partial(
         _hsv_kernel, num_row_blocks=nr, n_colors=c, total_px=hh * ww
     )
-    return pl.pallas_call(
+    return launch.pallas_call(
         kernel,
+        name="hsv_color",
         grid=(b, nr),
         in_specs=[
             pl.BlockSpec((1, block_rows, ww, 3), lambda bi, ri: (bi, ri, 0, 0)),
@@ -85,9 +87,8 @@ def hsv_color_hist(
         ],
         out_specs=pl.BlockSpec((1, c + 1), lambda bi, ri: (bi, 0)),
         out_shape=jax.ShapeDtypeStruct((b, c + 1), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((1, c + 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
-        ),
+        scratch_shapes=[launch.VMEM((1, c + 1), jnp.float32)],
+        dimension_semantics=("parallel", "arbitrary"),
         interpret=interpret,
+        rows=b,
     )(crops.astype(jnp.float32), ranges.astype(jnp.float32))

@@ -11,7 +11,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import launch
 
 NEG_INF = -1e30
 
@@ -44,7 +45,7 @@ def moe_router_tk(
     k: int,
     *,
     block_t: int = 1024,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ):
     t, e = logits.shape
     block_t = min(block_t, t)
@@ -52,8 +53,9 @@ def moe_router_tk(
     nt = t // block_t
 
     kernel = functools.partial(_router_kernel, k=k)
-    w, idx = pl.pallas_call(
+    w, idx = launch.pallas_call(
         kernel,
+        name="moe_router",
         grid=(nt,),
         in_specs=[pl.BlockSpec((block_t, e), lambda ti: (ti, 0))],
         out_specs=[
@@ -64,9 +66,8 @@ def moe_router_tk(
             jax.ShapeDtypeStruct((t, k), logits.dtype),
             jax.ShapeDtypeStruct((t, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",),
-        ),
+        dimension_semantics=("parallel",),
         interpret=interpret,
+        rows=t,
     )(logits)
     return w, idx

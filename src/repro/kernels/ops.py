@@ -14,8 +14,6 @@ transposes / flattening internally.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -23,19 +21,10 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_bkgd
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.hsv_color import hsv_color_hist
+from repro.kernels.launch import resolve_impl as _resolve
 from repro.kernels.moe_router import moe_router_tk
 from repro.kernels.rglru import rglru_bsw
 from repro.kernels.ssd import ssd_bhcp
-
-
-def _resolve(impl: str):
-    if impl == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "xla"
-    return impl
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 # --------------------------------------------------------------------------- #
@@ -79,7 +68,6 @@ def flash_attention(
         qf, kf, vf,
         group=group, causal=causal, window=window,
         block_q=min(block_q, sp), block_k=min(block_k, sp),
-        interpret=_interpret(),
     )
     out = of.reshape(b, h, sp, d).transpose(0, 2, 1, 3)
     return out[:, :s]
@@ -106,7 +94,7 @@ def decode_attention(
     vf = v_cache.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
     of = decode_attention_bkgd(
         qf, kf, vf, lengths,
-        num_kv_heads=hkv, block_k=min(block_k, s), interpret=_interpret(),
+        num_kv_heads=hkv, block_k=min(block_k, s),
     )
     return of.reshape(b, hkv, g, d).reshape(b, h, d)
 
@@ -132,7 +120,6 @@ def rglru(
     return rglru_bsw(
         x, r, i, a_param, h0,
         c=c, block_s=min(block_s, s), block_w=min(block_w, w),
-        interpret=_interpret(),
     )
 
 
@@ -162,7 +149,6 @@ def ssd(
         Cm.transpose(0, 2, 1, 3),
         h0,
         chunk=min(chunk, s),
-        interpret=_interpret(),
     )
     return y.transpose(0, 2, 1, 3), hl
 
@@ -186,7 +172,7 @@ def hsv_color_classify(
         return ref.hsv_color_classify(crops, ranges)
     hist = hsv_color_hist(
         crops, ranges,
-        block_rows=min(block_rows, crops.shape[1]), interpret=_interpret(),
+        block_rows=min(block_rows, crops.shape[1]),
     )
     return hist, jnp.argmax(hist, axis=-1)
 
@@ -197,5 +183,5 @@ def moe_topk_router(logits: jax.Array, k: int, *, impl: str = "auto", block_t: i
         return ref.moe_topk_router(logits, k)
     t = logits.shape[0]
     return moe_router_tk(
-        logits, k, block_t=min(block_t, t), interpret=_interpret()
+        logits, k, block_t=min(block_t, t)
     )

@@ -17,7 +17,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import launch
 
 
 def _rglru_kernel(
@@ -65,7 +66,7 @@ def rglru_bsw(
     c: float = 8.0,
     block_s: int = 256,
     block_w: int = 512,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ):
     b, s, w = x.shape
     block_s = min(block_s, s)
@@ -77,8 +78,9 @@ def rglru_bsw(
     kernel = functools.partial(
         _rglru_kernel, c=c, block_s=block_s, num_seq_chunks=ns
     )
-    out, hlast = pl.pallas_call(
+    out, hlast = launch.pallas_call(
         kernel,
+        name="rglru",
         grid=(b, nw, ns),
         in_specs=[
             pl.BlockSpec((1, block_s, block_w), lambda bi, wi, si: (bi, si, wi)),
@@ -95,10 +97,9 @@ def rglru_bsw(
             jax.ShapeDtypeStruct((b, s, w), x.dtype),
             jax.ShapeDtypeStruct((b, w), x.dtype),
         ],
-        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+        scratch_shapes=[launch.VMEM((1, block_w), jnp.float32)],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
+        rows=b * s,
     )(x, r, i, a2d, h0)
     return out, hlast

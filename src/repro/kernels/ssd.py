@@ -19,7 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import launch
 
 
 def _ssd_kernel(
@@ -97,7 +98,7 @@ def ssd_bhcp(
     h0: jax.Array,   # (B, H, P, N)
     *,
     chunk: int = 64,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ):
     b, h, s, p = x.shape
     g, n = Bm.shape[1], Bm.shape[3]
@@ -106,13 +107,14 @@ def ssd_bhcp(
     nc = s // chunk
 
     kernel = functools.partial(_ssd_kernel, num_chunks=nc, chunk=chunk)
-    y, hlast = pl.pallas_call(
+    y, hlast = launch.pallas_call(
         kernel,
+        name="ssd",
         grid=(b, h, nc),
         in_specs=[
             pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
             pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
-            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,), memory_space=launch.SMEM),
             pl.BlockSpec((1, 1, chunk, n), lambda bi, hi, ci, r=rep: (bi, hi // r, ci, 0)),
             pl.BlockSpec((1, 1, chunk, n), lambda bi, hi, ci, r=rep: (bi, hi // r, ci, 0)),
             pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
@@ -125,10 +127,9 @@ def ssd_bhcp(
             jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
             jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+        scratch_shapes=[launch.VMEM((p, n), jnp.float32)],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
+        rows=b * s,
     )(x, dt, A.astype(jnp.float32), Bm, Cm, h0)
     return y, hlast

@@ -10,11 +10,11 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
+from repro.kernels.launch import AxisType, make_mesh
+
 
 def _mk(shape, axes) -> Mesh:
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -133,7 +133,9 @@ class CostSample:
 
     @staticmethod
     def from_compiled(compiled, default_group: int, compile_seconds: float = 0.0):
-        ca = compiled.cost_analysis() or {}
+        from repro.kernels.launch import cost_analysis_dict
+
+        ca = cost_analysis_dict(compiled)
         colls = parse_collectives(compiled.as_text(), default_group)
         ma = compiled.memory_analysis()
         mem = {

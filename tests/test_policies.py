@@ -115,6 +115,51 @@ def test_cost_driven_never_worse_fig7_grid():
     assert not worse, worse
 
 
+def test_tied_selectivity_rank_is_deterministic():
+    """Regression (degenerate statistics): at sel_a == sel_b the rank order
+    must be well-defined, not an artifact of estimator noise. The lottery
+    estimator drifts by ~1/tickets per recorded batch; ranking on the raw
+    float made SelectivityDriven flip order mid-run and (luckily) beat
+    CostDriven on the Fig. 7 grid at sel=0.5/0.5."""
+    stats = StatsBoard(["A", "B"])
+    _seed(stats, "A", cost=0.010, sel=0.5)
+    _seed(stats, "B", cost=0.020, sel=0.5)
+    A = _pred("A", set(), 0.010, "cpu")
+    B = _pred("B", set(), 0.020, "gpu:0")
+    batch = make_batch({"rid": np.arange(4)})
+
+    # noise-level drift (well under the rank resolution) must not flip order
+    for da, db in [(0, 0), (+3, 0), (0, +3), (-3, +2)]:
+        stats["A"].wins = int(1000 * 0.5) + da
+        stats["B"].wins = int(1000 * 0.5) + db
+        for policy in (CostDriven(), SelectivityDriven(), ScoreDriven()):
+            order = [p.name for p in policy.rank(batch, [B, A], stats, None)]
+            assert order == ["A", "B"], (policy.name, da, db, order)
+
+
+def test_cost_driven_matches_selectivity_driven_at_tied_grid_cell():
+    """The exact failing Fig. 7 cell: sel_a == sel_b == 0.5. With the
+    deterministic tie-break both policies produce the same schedule, so
+    cost-driven can no longer lose to selectivity-driven here."""
+    rng = np.random.default_rng(7)
+    n = 60
+    a_pass = set(rng.choice(n, n // 2, replace=False).tolist())
+    b_pass = set(rng.choice(n, n // 2, replace=False).tolist())
+    A = _pred("A", a_pass, 0.010, "cpu")
+    B = _pred("B", b_pass, 0.020, "gpu:0")
+    seed = [("A", 0.010, 0.5), ("B", 0.020, 0.5)]
+
+    def batches():
+        return [
+            make_batch({"rid": np.arange(i, i + 10)}, np.arange(i, i + 10))
+            for i in range(0, n, 10)
+        ]
+
+    _, t_cost = _run(CostDriven(), [A, B], batches(), seed_stats=seed)
+    _, t_sel = _run(SelectivityDriven(), [A, B], batches(), seed_stats=seed)
+    assert t_cost <= t_sel * 1.02, (t_cost, t_sel)
+
+
 def test_reuse_aware_prefers_cached_predicate():
     """UC2: with a full cache for the expensive predicate, reuse-aware
     ranks it FIRST while plain cost-driven keeps it last."""

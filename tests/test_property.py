@@ -5,8 +5,12 @@ predicate costs/selectivities/policies/batch sizes, the AQP result set
 EQUALS naive conjunctive evaluation.
 """
 import numpy as np
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import (
     AQPExecutor, CostDriven, DataAware, HydroPolicy, Predicate, ReuseAware,
