@@ -19,10 +19,11 @@ import numpy as np
 
 from benchmarks.harness import record
 from repro.core import (
-    AQPExecutor, CostDriven, Predicate, ScoreDriven, SelectivityDriven,
-    SimClock, UDF, make_batch,
+    AQPExecutor, CostDriven, ScoreDriven, SelectivityDriven, SimClock,
+    make_batch,
 )
 from repro.core.policies import EddyPolicy
+from repro.udfs import planted_predicate
 
 BREED_COST = 0.030   # s/row — paper: 35.11ms (case 1: 29.5, case 2: 28.3)
 COLOR_COST = 0.002   # s/row — paper: 1.98ms
@@ -48,15 +49,10 @@ def build(case: int, n_rows: int, seed: int = 0):
     breed_pass = set(rng.choice(n_rows, int(n_rows * sel_breed), replace=False).tolist())
     color_pass = set(rng.choice(n_rows, int(n_rows * sel_color), replace=False).tolist())
 
-    def mk(name, passing, cost, resource):
-        ids = frozenset(passing)
-        udf = UDF(name, fn=lambda d: np.isin(d["rid"], list(ids)),
-                  columns=("rid",), resource=resource,
-                  cost_model=lambda rows: rows * cost, bucket=False)
-        return Predicate(name, udf, compare=lambda o: o.astype(bool))
-
-    breed = mk("breed", breed_pass, BREED_COST, "tpu:0")
-    color = mk("color", color_pass, COLOR_COST, "cpu")
+    breed = planted_predicate("breed", breed_pass,
+                              cost_per_row=BREED_COST, resource="tpu:0")
+    color = planted_predicate("color", color_pass,
+                              cost_per_row=COLOR_COST, resource="cpu")
     batches = [
         make_batch({"rid": np.arange(i, min(i + 10, n_rows))},
                    np.arange(i, min(i + 10, n_rows)))

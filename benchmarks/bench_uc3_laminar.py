@@ -20,10 +20,11 @@ import numpy as np
 
 from benchmarks.harness import record
 from repro.core import (
-    AQPExecutor, CostDriven, DeviceAlternating, Predicate, RoundRobin,
-    SimClock, UDF, make_batch,
+    AQPExecutor, CostDriven, DeviceAlternating, RoundRobin, SimClock,
+    make_batch,
 )
 from repro.core.policies import StickyDevice
+from repro.udfs import planted_predicate
 
 N_FRAMES = 1000
 OBJ_COST = 0.020
@@ -36,13 +37,9 @@ def make_preds(seed=0):
     person = frozenset(rng.choice(N_FRAMES, int(N_FRAMES * 0.5), replace=False).tolist())
     nohat = frozenset(rng.choice(N_FRAMES, int(N_FRAMES * 0.3), replace=False).tolist())
 
-    def mk(name, ids, cost):
-        udf = UDF(name, fn=lambda d: np.isin(d["rid"], list(ids)),
-                  columns=("rid",), resource="tpu:0",
-                  cost_model=lambda rows: rows * cost, bucket=False)
-        return Predicate(name, udf, compare=lambda o: o.astype(bool))
-
-    return mk("obj", person, OBJ_COST), mk("hat", nohat, HAT_COST), person & nohat
+    obj = planted_predicate("obj", person, cost_per_row=OBJ_COST)
+    hat = planted_predicate("hat", nohat, cost_per_row=HAT_COST)
+    return obj, hat, person & nohat
 
 
 def batches():

@@ -6,8 +6,11 @@ WHERE Object.label='dog'
   AND DogBreedClassifier(Crop(frame, bbox)) = 'great dane'
   AND DogColorClassifier(Crop(frame, bbox)) = 'black';
 
-The color classifier is the real HSV kernel (kernels/hsv_color.py); the
-breed classifier stands in with real conv-ish compute + planted labels.
+Both predicates come from the kernel-backed library (repro.udfs): the
+color classifier is the real HSV Pallas kernel — its per-launch timings
+show up in the routing statistics under "hsv_color" because the executor
+connects kernel launch hooks to its StatsBoard — and the breed classifier
+is a planted-label stand-in with real XLA compute.
 Compare routing policies with --policy {cost,score,selectivity,hydro}.
 
   PYTHONPATH=src python examples/lost_dog_query.py --frames 200 --policy cost
@@ -20,12 +23,12 @@ sys.path.insert(0, "src")
 
 import numpy as np  # noqa: E402
 
-from repro.core import Predicate, Query, UDF, optimize  # noqa: E402
+from repro import udfs  # noqa: E402
+from repro.core import Query, optimize  # noqa: E402
 from repro.core.policies import EDDY_POLICIES  # noqa: E402
 from repro.data.video import (  # noqa: E402
-    BREEDS, SyntheticVideo, classify_color_batch, crop_to_canonical,
+    BREEDS, SyntheticVideo, crop_to_canonical,
 )
-from repro.kernels import ops  # noqa: E402
 
 
 def source(video, chunk=32):
@@ -54,21 +57,13 @@ def main() -> None:
 
     video = SyntheticVideo(num_frames=args.frames, seed=7)
 
-    def breed_fn(d):  # ViT stand-in: real compute, planted labels
-        _ = ops.hsv_color_classify(d["crop"], impl="xla")
-        return d["breed_gt"]
-
-    p_breed = Predicate(
-        "DogBreedClassifier",
-        UDF("breed_udf", breed_fn, columns=("crop", "breed_gt"), resource="tpu:0"),
-        compare=lambda o: o == BREEDS.index(args.breed),
+    p_breed = udfs.planted_classifier(
+        "DogBreedClassifier", BREEDS.index(args.breed),
+        label_column="breed_gt", pixel_column="crop", resource="tpu:0",
     )
-    p_color = Predicate(
-        "DogColorClassifier",
-        UDF("color_udf",
-            lambda d: np.array(classify_color_batch(d["crop"]), object),
-            columns=("crop",), resource="cpu", bucket=False),
-        compare=lambda o: o == args.color,
+    p_color = udfs.color_predicate(
+        args.color, size=64, impl="pallas", resource="cpu",
+        name="DogColorClassifier",
     )
 
     q = Query(source=source(video), predicates=[p_breed, p_color],
@@ -88,9 +83,19 @@ def main() -> None:
     if n > 10:
         print(f"  ... and {n - 10} more")
     print("\nrouting statistics (collected at run time, no priors):")
-    for name, s in plan.executor.stats_snapshot().items():
+    pred_names = {p.name for p in q.predicates}
+    snap = plan.executor.stats_snapshot()
+    for name, s in snap.items():
+        if name not in pred_names:
+            continue
         print(f"  {name}: cost/row={s['cost_per_row']*1e3:.2f}ms "
               f"selectivity={s['selectivity']:.3f} score={s['score']*1e3:.2f}")
+    kernel_rows = {n: s for n, s in snap.items() if n not in pred_names}
+    if kernel_rows:
+        print("per-kernel launch cost (launch hooks -> same StatsBoard):")
+        for name, s in kernel_rows.items():
+            print(f"  {name}: cost/row={s['cost_per_row']*1e3:.3f}ms "
+                  f"launches={int(s['batches'])}")
 
 
 if __name__ == "__main__":

@@ -9,6 +9,10 @@ Q3 executes twice — cost-driven vs reuse-aware — and reports how much of
 the work the reuse-aware router avoided. GACU worker counts show Laminar
 scaling on the expensive predicate.
 
+Both detectors are ``repro.udfs.planted_detector``s: real HSV-kernel
+compute with planted labels, so the executor's launch hook records genuine
+per-launch kernel cost under "hsv_color" in the routing statistics.
+
   PYTHONPATH=src python examples/warehouse_safety.py --frames 400
 """
 import argparse
@@ -19,21 +23,10 @@ sys.path.insert(0, "src")
 
 import numpy as np  # noqa: E402
 
+from repro import udfs  # noqa: E402
 from repro.core import (  # noqa: E402
-    AQPExecutor, CostDriven, Predicate, ReuseAware, ReuseCache, UDF, make_batch,
+    AQPExecutor, CostDriven, ReuseAware, ReuseCache, make_batch,
 )
-from repro.kernels import ops  # noqa: E402
-
-
-def make_detector(name, planted_mask, work_dim=96):
-    """Real compute (HSV kernel over a frame-sized buffer) + planted labels."""
-    def fn(d):
-        _ = ops.hsv_color_classify(
-            d["frame"].reshape(-1, work_dim, work_dim, 3), impl="xla"
-        )
-        return planted_mask[d["rid"]]
-
-    return UDF(name, fn, columns=("frame", "rid"), resource="tpu:0", bucket=False)
 
 
 def frame_batches(n_frames, work_dim=96, per=10, seed=0):
@@ -57,10 +50,9 @@ def main() -> None:
     person = rng.random(n) < 0.5
     nohat = rng.random(n) < 0.3
 
-    obj_udf = make_detector("ObjectDetector", person)
-    hat_udf = make_detector("HardHatDetector", nohat)
-    p_obj = Predicate("person", obj_udf, compare=lambda o: o.astype(bool))
-    p_hat = Predicate("no_hardhat", hat_udf, compare=lambda o: o.astype(bool))
+    p_obj = udfs.planted_detector("person", person, work_dim=96)
+    p_hat = udfs.planted_detector("no_hardhat", nohat, work_dim=96)
+    obj_udf, hat_udf = p_obj.udf, p_hat.udf
 
     def primed_cache():
         """Q1/Q2: exploratory queries populate a fresh cache."""
@@ -92,9 +84,14 @@ def main() -> None:
         snap = ex.stats_snapshot()
         results[label] = got
         print(f"\nQ3 [{label}] -> {len(got)} unsafe frames in {dt:.2f}s")
-        for pname, s in snap.items():
+        for pname in ("person", "no_hardhat"):
+            s = snap[pname]
             print(f"  {pname}: cache_hit_rate={s['cache_hit_rate']:.2f} "
                   f"est_cost/row={s['cost_per_row']*1e3:.2f}ms")
+        if "hsv_color" in snap:  # launch hook: real per-kernel launch cost
+            s = snap["hsv_color"]
+            print(f"  hsv_color kernel: cost/row={s['cost_per_row']*1e3:.3f}ms"
+                  f" launches={int(s['batches'])}")
         print(f"  GACU active workers: {ex.active_worker_counts()}")
 
     assert results["cost-driven"] == results["reuse-aware"]

@@ -1,6 +1,17 @@
 """AQPExecutor — wires EddyPull + EddyRouter + Laminar routers + workers
 into the executor of Fig. 2 and exposes the parent-executor pull interface
 (a blocking iterator over the output queue).
+
+Kernel cost visibility (§3.3): for the lifetime of a ``run()`` the executor
+registers ``launch.connect_stats_board(self.stats)``, so every Pallas
+launch a predicate makes reports its per-launch timing into the same
+StatsBoard the routing policies rank on — kernel UDF cost is profiled, not
+estimated, exactly like predicate-level cost. The hook is removed in
+``shutdown()`` so back-to-back executors never double-count each other's
+launches. The hook bus is process-global: two executors running
+CONCURRENTLY in one process would cross-record each other's kernel
+launches (no production path does this today; per-executor attribution
+needs launch-context tagging — see ROADMAP).
 """
 from __future__ import annotations
 
@@ -16,6 +27,7 @@ from repro.core.queues import BoundedQueue, CentralQueue, ClosedError
 from repro.core.simclock import WallClock
 from repro.core.stats import StatsBoard
 from repro.core.udf import Predicate
+from repro.kernels import launch as kernel_launch
 
 
 class AQPExecutor:
@@ -63,6 +75,7 @@ class AQPExecutor:
         self.warmup = warmup
         self._pull: Optional[EddyPull] = None
         self._router: Optional[EddyRouter] = None
+        self._kernel_hook = None  # launch-timing hook, live only during run()
 
     # ------------------------------------------------------------------ #
     def _on_worker_error(self, exc, tb):
@@ -74,6 +87,10 @@ class AQPExecutor:
 
     def run(self, source: Iterable[RoutingBatch]) -> Iterator[RoutingBatch]:
         """Execute; yields completed (non-empty) batches in completion order."""
+        if self._kernel_hook is None:
+            # Per-launch kernel timings feed the routing StatsBoard for the
+            # duration of the run; shutdown() deregisters.
+            self._kernel_hook = kernel_launch.connect_stats_board(self.stats)
         self._pull = EddyPull(source, self.central)
         self._router = EddyRouter(
             self.predicates, self.central, self.output, self.laminars,
@@ -106,6 +123,9 @@ class AQPExecutor:
         return list(self.run(source))
 
     def shutdown(self) -> None:
+        if self._kernel_hook is not None:
+            kernel_launch.remove_launch_hook(self._kernel_hook)
+            self._kernel_hook = None
         for lam in self.laminars.values():
             lam.stop()
         self.central.close()

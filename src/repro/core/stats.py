@@ -133,6 +133,10 @@ class StatsBoard:
             n: PredicateStats(n, cost_per_row=Ema(cost_alpha))
             for n in predicate_names
         }
+        # Routing predicates declared at construction. Auxiliary entries
+        # (per-kernel launch costs, fed by ``launch.connect_stats_board``)
+        # are created lazily via ``ensure`` and never gate warmup.
+        self._declared = frozenset(predicate_names)
         self.worker_load: Dict[str, float] = {}
         self.proxy_rate = Ema(0.3)  # seconds per proxy unit (data-aware ETA)
         self.bucket_fn = None       # content-based routing: batch -> bucket id
@@ -154,8 +158,40 @@ class StatsBoard:
     def __getitem__(self, name: str) -> PredicateStats:
         return self.preds[name]
 
+    def ensure(self, name: str) -> PredicateStats:
+        """Get-or-create an entry, safely from any worker thread.
+
+        Kernel launch hooks report under the kernel's own name, which is
+        unknown until the first launch; entries appear mid-run while the
+        eddy thread reads the board, so creation must hold the lock."""
+        with self._lock:
+            st = self.preds.get(name)
+            if st is None:
+                st = PredicateStats(name, cost_per_row=Ema(self.cost_alpha))
+                self.preds[name] = st
+            return st
+
+    def ensure_kernel(self, name: str) -> PredicateStats:
+        """Entry for a kernel-launch timing stream.
+
+        If a DECLARED routing predicate already owns ``name`` (a predicate
+        deliberately named after its kernel), the kernel entry is
+        namespaced ``kernel:<name>`` — launch events are compute samples
+        (rows_in == rows_out), so merging them into a predicate's entry
+        would drag its lottery selectivity toward 1.0 and flip its warmup
+        'measured' bit before any batch was routed."""
+        if name in self._declared:
+            name = "kernel:" + name
+        return self.ensure(name)
+
     def all_measured(self) -> bool:
-        return all(p.measured for p in self.preds.values())
+        """Warmup gate: every DECLARED routing predicate has a measurement.
+
+        Lazily-created kernel entries are deliberately excluded — a kernel
+        timing arriving mid-warmup must not wedge the router into waiting
+        for a "predicate" it can never route a batch to."""
+        with self._lock:
+            return all(self.preds[n].measured for n in self._declared)
 
     # ---------------- data-aware load accounting ---------------- #
     def add_load(self, worker: str, units: float) -> None:
@@ -173,4 +209,6 @@ class StatsBoard:
             return self.worker_load.get(worker, 0.0)
 
     def snapshot(self) -> Dict[str, Dict[str, float]]:
-        return {n: p.snapshot() for n, p in self.preds.items()}
+        with self._lock:  # copy first: entries may be created concurrently
+            items = list(self.preds.items())
+        return {n: p.snapshot() for n, p in items}

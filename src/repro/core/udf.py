@@ -45,11 +45,22 @@ class UDF:
     cost_model: Optional[Callable[[int], float]] = None
     proxy_cost: Optional[Callable[[Dict[str, np.ndarray]], float]] = None
     _ready: bool = field(default=False, repr=False)
+    # output dtype + trailing shape, learned from the first evaluation so
+    # zero-row calls don't have to launch the kernel just for metadata
+    _out_spec: Optional[tuple] = field(default=None, repr=False)
 
     def ensure_ready(self) -> None:
         if not self._ready:
             if self.warm_fn is not None:
-                self.warm_fn()
+                # A warm_fn may return a sample output (the library's
+                # one-row probes do); learn the output spec from it so the
+                # zero-row path never needs its own probe launch.
+                probe = self.warm_fn()
+                if probe is not None and self._out_spec is None:
+                    probe = np.asarray(probe)
+                    self._out_spec = (
+                        probe.dtype, probe.shape[1:] if probe.ndim else ()
+                    )
             self._ready = True
 
     def proxy(self, data: Dict[str, np.ndarray]) -> float:
@@ -63,18 +74,39 @@ class UDF:
         cols = {c: np.asarray(data[c]) for c in self.columns}
         rows = len(next(iter(cols.values())))
         if rows == 0:
-            probe = self.fn({c: v[:1] for c, v in cols.items()} if rows else cols)
-            return probe[:0] if probe is not None else np.zeros((0,))
+            if self._out_spec is None:
+                # Probe with ONE synthesized row, never genuinely empty
+                # arrays: bucketing kernels assert on zero-sized grids, and
+                # ``v[:1]`` of an empty column is still empty. The learned
+                # dtype/trailing shape is cached so this costs one launch
+                # per UDF lifetime, not one per empty batch.
+                probe_cols = {
+                    c: np.zeros((1,) + v.shape[1:], v.dtype)
+                    for c, v in cols.items()
+                }
+                probe = self.fn(probe_cols)
+                if probe is None:
+                    # cache a sentinel so fn(None) doesn't re-probe forever
+                    self._out_spec = (np.dtype(np.float64), ())
+                else:
+                    probe = np.asarray(probe)
+                    self._out_spec = (probe.dtype, probe.shape[1:]
+                                      if probe.ndim else ())
+            dtype, trailing = self._out_spec
+            return np.zeros((0,) + tuple(trailing), dtype)
         if not self.bucket:
-            return np.asarray(self.fn(cols))
-        b = bucket_rows(rows)
-        if b != rows:
-            cols = {
-                c: np.concatenate([v, np.repeat(v[:1], b - rows, axis=0)])
-                for c, v in cols.items()
-            }
-        out = np.asarray(self.fn(cols))
-        return out[:rows]
+            out = np.asarray(self.fn(cols))
+        else:
+            b = bucket_rows(rows)
+            if b != rows:
+                cols = {
+                    c: np.concatenate([v, np.repeat(v[:1], b - rows, axis=0)])
+                    for c, v in cols.items()
+                }
+            out = np.asarray(self.fn(cols))[:rows]
+        if out.ndim:
+            self._out_spec = (out.dtype, out.shape[1:])
+        return out
 
 
 @dataclass

@@ -333,18 +333,16 @@ def stats_board_hook(board) -> Callable[[LaunchEvent], None]:
     board learns is the cost-per-row EMA the routing policies consume.
     Lazily-created kernel entries use the board's configured ``cost_alpha``
     so kernel cost estimates share the estimator horizon of every other
-    predicate on the board."""
-    from repro.core.stats import Ema, PredicateStats
+    predicate on the board. Entry creation goes through
+    ``board.ensure_kernel``, which is thread-safe (launches report from
+    predicate worker threads while the eddy thread reads the same board)
+    and namespaces the entry ``kernel:<name>`` if a declared routing
+    predicate already owns the kernel's launch name."""
 
     def hook(event: LaunchEvent) -> None:
-        st = board.preds.setdefault(
-            event.name,
-            PredicateStats(
-                event.name,
-                cost_per_row=Ema(getattr(board, "cost_alpha", 0.3)),
-            ),
+        board.ensure_kernel(event.name).record_eval(
+            event.rows, event.rows, event.seconds
         )
-        st.record_eval(event.rows, event.rows, event.seconds)
 
     return hook
 

@@ -1,0 +1,50 @@
+"""repro.udfs — the kernel-backed predicate library (Hydro §3.3 + §5.1).
+
+This package closes the loop the ROADMAP called out: Pallas kernels become
+first-class ``Predicate``s whose per-launch timings feed the SAME
+``StatsBoard.record_eval`` path the eddy routing policies rank on.
+``AQPExecutor.run()`` registers ``launch.connect_stats_board`` for the
+lifetime of a run, so any predicate built here reports kernel cost under
+the kernel's launch name, alongside its predicate-level stats — profiled,
+never estimated.
+
+Layout
+------
+``library``   six kernel predicate builders + the ``KERNEL_PREDICATES``
+              registry (hsv_color, moe_router, ssd, rglru,
+              flash_attention, decode_attention)
+``rooflines`` analytic roofline cost priors (cold-start / SimClock only)
+``synthetic`` planted predicates for deterministic benchmarks
+
+Registering a new kernel predicate
+----------------------------------
+1. Launch the kernel through ``repro.kernels.launch.pallas_call`` with a
+   unique ``name=`` and an honest ``rows=`` — that name is the StatsBoard
+   entry every launch reports under, and rows is what cost-per-row divides
+   by.
+2. Write a builder returning a ``Predicate`` whose UDF sets:
+   ``warm_fn`` (one-row probe, so GACU activation pays compile cost once),
+   ``cost_model`` (a ``rooflines.Roofline.cost_model`` prior),
+   ``proxy_cost`` (data-aware load units for Laminar balancing), and keeps
+   ``bucket=True`` unless the kernel is shape-polymorphic.
+3. ``register_kernel_predicate("<launch name>", builder)`` — then
+   ``build_predicate("<launch name>", **kwargs)`` works anywhere, and the
+   integration suite (tests/test_kernel_udfs.py) exercises it for free if
+   added to its scenario table.
+"""
+from repro.udfs.library import (  # noqa: F401
+    KERNEL_PREDICATES,
+    attention_scorer_predicate,
+    build_predicate,
+    color_predicate,
+    decode_relevance_predicate,
+    register_kernel_predicate,
+    rglru_gate_predicate,
+    ssd_scorer_predicate,
+    topic_router_predicate,
+)
+from repro.udfs.synthetic import (  # noqa: F401
+    planted_classifier,
+    planted_detector,
+    planted_predicate,
+)

@@ -1,0 +1,228 @@
+"""End-to-end integration: kernel-backed predicates through AQPExecutor.
+
+The ISSUE-2 acceptance path: ``AQPExecutor.run()`` over predicates from
+``repro.udfs`` must (a) produce exactly the oracle conjunctive result,
+(b) populate the StatsBoard with per-launch kernel cost observations (the
+launch hook actually fired), and (c) deregister the hook when the run is
+over, so back-to-back executors never double-count each other's launches.
+
+Everything runs in Pallas interpret mode (auto-selected off-TPU) on tiny
+shapes; kernel-vs-reference numerics live in test_kernels.py, routing
+correctness across policies in test_property.py — this file is about the
+seam between the two subsystems.
+"""
+import numpy as np
+import pytest
+
+from repro import udfs
+from repro.core import AQPExecutor, CostDriven, make_batch
+from repro.core.udf import UDF, bucket_rows
+from repro.kernels import launch
+
+SIZE = 8     # crop height/width for the hsv predicate
+SEQ = 16     # token sequence length for the text predicates
+
+
+def _dataset(n=24, seed=0):
+    """Crops with planted dark/bright thirds + random token sequences."""
+    rng = np.random.default_rng(seed)
+    crops = rng.uniform(0, 255, (n, SIZE, SIZE, 3)).astype(np.float32)
+    crops[: n // 3] = rng.uniform(0, 40, (n // 3, SIZE, SIZE, 3))  # black-ish
+    tokens = rng.integers(1, 256, (n, 12)).astype(np.int32)
+    return {"crop": crops, "tokens": tokens}
+
+
+def _batches(data, per=6):
+    n = len(data["crop"])
+    return [
+        make_batch({k: v[i:i + per] for k, v in data.items()},
+                   np.arange(i, min(i + per, n)))
+        for i in range(0, n, per)
+    ]
+
+
+def _oracle_ids(preds, data):
+    n = len(next(iter(data.values())))
+    mask = np.ones(n, bool)
+    for p in preds:
+        mask &= p.mask_from_outputs(p.udf(data))
+    return set(np.nonzero(mask)[0].tolist())
+
+
+def _make_preds():
+    return [
+        udfs.color_predicate("black", size=SIZE),
+        udfs.topic_router_predicate(0, n_experts=4, seq=SEQ),
+        udfs.ssd_scorer_predicate(0.0, seq=SEQ),
+    ]
+
+
+# --------------------------------------------------------------------------- #
+# (a) + (b): oracle equality and kernel costs on the board                    #
+# --------------------------------------------------------------------------- #
+def test_executor_populates_stats_board_with_kernel_costs():
+    data = _dataset()
+    preds = _make_preds()
+    expect = _oracle_ids(preds, data)
+    assert 0 < len(expect) < len(data["crop"])  # non-trivial filter
+
+    ex = AQPExecutor(preds, policy=CostDriven(), max_workers=2)
+    got = {int(i) for b in ex.run(iter(_batches(data))) for i in b.row_ids}
+    assert got == expect
+
+    snap = ex.stats_snapshot()
+    for kernel in ("hsv_color", "moe_router", "ssd"):
+        assert kernel in snap, f"launch hook never recorded {kernel}"
+        assert snap[kernel]["batches"] > 0
+        assert snap[kernel]["cost_per_row"] > 0
+    # predicate-level stats measured too (the policies rank on these)
+    for p in preds:
+        assert snap[p.name]["batches"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# (c): hook lifecycle                                                         #
+# --------------------------------------------------------------------------- #
+def test_hook_deregistered_after_run_and_no_double_count():
+    data = _dataset()
+    preds = _make_preds()
+    hooks_before = len(launch._HOOKS)
+
+    ex1 = AQPExecutor(preds, policy=CostDriven(), max_workers=2)
+    list(ex1.run(iter(_batches(data))))
+    assert len(launch._HOOKS) == hooks_before, "run() leaked its launch hook"
+    assert ex1._kernel_hook is None
+
+    snap1 = ex1.stats_snapshot()
+    launches1 = {k: snap1[k]["batches"] for k in ("hsv_color", "moe_router")}
+
+    # a launch outside any run must not reach the (shut-down) executor board
+    udfs.color_predicate("black", size=SIZE).udf(
+        {"crop": data["crop"][:4]}
+    )
+    assert ex1.stats_snapshot()["hsv_color"]["batches"] == launches1["hsv_color"]
+
+    # a second executor over the same predicates counts only its own launches
+    ex2 = AQPExecutor(preds, policy=CostDriven(), max_workers=2)
+    list(ex2.run(iter(_batches(data))))
+    snap2 = ex2.stats_snapshot()
+    for k, v in launches1.items():
+        assert snap2[k]["batches"] > 0
+        assert ex1.stats_snapshot()[k]["batches"] == v, "double-counted"
+    assert len(launch._HOOKS) == hooks_before
+
+
+def test_hook_deregistered_when_worker_raises():
+    def boom(d):
+        raise ValueError("planted failure")
+
+    bad = udfs.planted_predicate("ok", range(5), cost_per_row=1e-4)
+    bad.udf.fn = boom
+    hooks_before = len(launch._HOOKS)
+    ex = AQPExecutor([bad], max_workers=1)
+    batches = [make_batch({"rid": np.arange(5)}, np.arange(5))]
+    with pytest.raises(RuntimeError, match="planted failure"):
+        list(ex.run(iter(batches)))
+    assert len(launch._HOOKS) == hooks_before
+    assert ex._kernel_hook is None
+
+
+# --------------------------------------------------------------------------- #
+# zero-row regression (ISSUE-2 satellite): probe with a synthesized row       #
+# --------------------------------------------------------------------------- #
+def test_zero_row_udf_never_calls_fn_with_empty_arrays():
+    seen = []
+
+    def fn(d):
+        seen.append(len(d["x"]))
+        assert len(d["x"]) > 0, "zero-row probe must synthesize a row"
+        return (d["x"].sum(-1) > 0).astype(np.int32)
+
+    udf = UDF("u", fn, columns=("x",))
+    out = udf({"x": np.zeros((0, 3), np.float32)})
+    assert out.shape == (0,)
+    assert out.dtype == np.int32   # dtype comes from the probe output
+    assert seen == [1]
+    # the learned output spec is cached: later empty batches are free
+    # (no kernel launch, so no bogus 1-row sample on any stats board)
+    again = udf({"x": np.zeros((0, 3), np.float32)})
+    assert again.shape == (0,) and again.dtype == np.int32
+    assert seen == [1]
+
+
+def test_zero_row_after_real_batch_never_probes():
+    calls = []
+
+    def fn(d):
+        calls.append(len(d["x"]))
+        return d["x"].sum(-1)
+
+    udf = UDF("u", fn, columns=("x",))
+    udf({"x": np.ones((4, 3), np.float32)})   # learns the output spec
+    out = udf({"x": np.zeros((0, 3), np.float32)})
+    assert out.shape == (0,)
+    assert calls == [4]                        # zero-row call was metadata-only
+
+
+@pytest.mark.parametrize("kernel", sorted(udfs.KERNEL_PREDICATES))
+def test_zero_row_path_works_for_every_kernel_predicate(kernel):
+    kw = {"size": SIZE} if kernel == "hsv_color" else {"seq": SEQ}
+    p = udfs.build_predicate(kernel, **kw)
+    data = _dataset(n=6)
+    empty = {k: v[:0] for k, v in data.items()}
+    out = p.udf(empty)
+    assert out.shape[0] == 0
+    assert p.mask_from_outputs(out).shape == (0,)
+
+
+# --------------------------------------------------------------------------- #
+# bucketing invariant, deterministically (hypothesis twin in test_property)   #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("kernel", sorted(udfs.KERNEL_PREDICATES))
+def test_bucket_padding_matches_unbucketed_outputs(kernel):
+    kw = {"size": SIZE} if kernel == "hsv_color" else {"seq": SEQ}
+    p = udfs.build_predicate(kernel, **kw)
+    data = _dataset(n=5, seed=3)   # 5 -> bucketed to 8
+    assert bucket_rows(5) == 8
+    bucketed = p.udf(data)         # pads to 8 rows, slices back
+    p.udf.bucket = False
+    unbucketed = p.udf(data)
+    np.testing.assert_allclose(bucketed, unbucketed, rtol=1e-5, atol=1e-6)
+
+
+def test_warm_fn_precompiles_without_board_traffic():
+    """GACU activation: warm_fn launches once; ensure_ready is idempotent;
+    the warm probe also teaches the UDF its output spec, so zero-row
+    batches afterwards never launch."""
+    events = []
+    p = udfs.topic_router_predicate(0, n_experts=4, seq=SEQ)
+    with launch.launch_hooks(events.append):
+        p.udf.ensure_ready()
+        assert [e.name for e in events] == ["moe_router"]
+        p.udf.ensure_ready()
+        assert len(events) == 1   # second call is a no-op
+        out = p.udf({"tokens": np.zeros((0, 12), np.int32)})
+        assert out.shape == (0,)
+        assert len(events) == 1   # zero-row call reused the warm spec
+
+
+def test_kernel_name_colliding_with_predicate_name_is_namespaced():
+    """A predicate deliberately named after its kernel must not have launch
+    events merged into its routing entry (they would drag the lottery
+    selectivity toward 1.0 and end warmup before any batch was routed)."""
+    data = _dataset()
+    pred = udfs.color_predicate("black", size=SIZE, name="hsv_color")
+    other = udfs.topic_router_predicate(0, n_experts=4, seq=SEQ)
+    expect = _oracle_ids([pred, other], data)
+
+    ex = AQPExecutor([pred, other], policy=CostDriven(), max_workers=2)
+    got = {int(i) for b in ex.run(iter(_batches(data))) for i in b.row_ids}
+    assert got == expect
+
+    snap = ex.stats_snapshot()
+    assert "kernel:hsv_color" in snap          # launches, diverted
+    assert snap["kernel:hsv_color"]["batches"] > 0
+    # predicate entry holds ONLY routing evaluations: its lottery saw some
+    # rows dropped (launch events never record wins, so selectivity would
+    # be pinned at 1.0 had they been merged)
+    assert snap["hsv_color"]["selectivity"] < 1.0

@@ -105,6 +105,61 @@ def test_bucket_rows_properties(n):
     assert (b & (b - 1)) == 0  # power of two
 
 
+@given(n=st.integers(0, 1 << 12), minimum=st.integers(1, 256))
+@settings(max_examples=50, deadline=None)
+def test_bucket_rows_respects_minimum(n, minimum):
+    b = bucket_rows(n, minimum=minimum)
+    assert b >= minimum
+    assert b >= n or n == 0
+    assert b % minimum == 0          # doubling from minimum: minimum * 2^k
+    assert b == minimum or b < 2 * max(n, 1)
+
+
+@given(
+    rows=st.integers(1, 60),
+    width=st.integers(1, 5),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=40, deadline=None)
+def test_udf_padding_invariant(rows, width, seed):
+    """For ANY row count (power of two or not), the bucketed UDF output
+    equals the unbucketed ``fn`` output on the first ``rows`` rows, and
+    ``fn`` only ever sees the bucketed (power-of-two) row count."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, width))
+    seen = []
+
+    def fn(d):
+        seen.append(len(d["x"]))
+        return d["x"].sum(axis=-1) * 2.0   # row-independent, like the kernels
+
+    udf = UDF("u", fn, columns=("x",))
+    out = udf({"x": x})
+    assert out.shape == (rows,)
+    np.testing.assert_allclose(out, x.sum(axis=-1) * 2.0)
+    assert seen == [bucket_rows(rows)]
+
+
+@given(rows=st.integers(1, 60), seed=st.integers(0, 2**16))
+@settings(max_examples=40, deadline=None)
+def test_udf_zero_row_call_matches_probe_dtype(rows, seed):
+    """The zero-row path never hands ``fn`` an empty array (it probes with
+    one synthesized row, or reuses the cached output spec) and returns an
+    empty result with the same dtype as a real evaluation."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, 3)).astype(np.float32)
+
+    def fn(d):
+        assert len(d["x"]) > 0
+        return (d["x"].sum(-1) > 0).astype(np.int8)
+
+    udf = UDF("u", fn, columns=("x",))
+    full = udf({"x": x})
+    empty = udf({"x": x[:0]})
+    assert empty.shape == (0,)
+    assert empty.dtype == full.dtype
+
+
 @given(
     lam=st.floats(0.05, 1.0),
     cap=st.integers(1, 64),
