@@ -20,8 +20,8 @@ import numpy as np
 
 from benchmarks.harness import record
 from repro.core import (
-    AQPExecutor, CostDriven, DeviceAlternating, RoundRobin, SimClock,
-    make_batch,
+    AQPExecutor, CostDriven, DeviceAlternating, DevicePool, RoundRobin,
+    SimClock, make_batch,
 )
 from repro.core.policies import StickyDevice
 from repro.udfs import planted_predicate
@@ -52,12 +52,17 @@ def batches():
 def run(*, max_workers, devices, laminar_policy=RoundRobin, warmup=True):
     obj, hat, expect = make_preds()
     clk = SimClock()
+    # explicit per-device slot inventory (arbiter era): capacity sized so
+    # both predicates can reach their ceiling — the deterministic Fig. 11
+    # timelines predate slot contention and must stay exact
+    pool = DevicePool({dev: 2 * max_workers for dev in devices})
     ex = AQPExecutor(
         [obj, hat], policy=CostDriven(), clock=clk,
         laminar_policy_factory=laminar_policy,
         max_workers=max_workers, warmup=warmup,
         devices={"obj": devices, "hat": devices},
         serial_fraction=SERIAL_FRACTION,
+        pool=pool,
     )
     got = {int(i) for b in ex.run(iter(batches())) for i in b.row_ids}
     assert got == expect

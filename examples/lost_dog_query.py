@@ -90,7 +90,8 @@ def main() -> None:
             continue
         print(f"  {name}: cost/row={s['cost_per_row']*1e3:.2f}ms "
               f"selectivity={s['selectivity']:.3f} score={s['score']*1e3:.2f}")
-    kernel_rows = {n: s for n, s in snap.items() if n not in pred_names}
+    kernel_rows = {n: s for n, s in snap.items()
+                   if n not in pred_names and not n.startswith("_")}
     if kernel_rows:
         print("per-kernel launch cost (launch hooks -> same StatsBoard):")
         for name, s in kernel_rows.items():

@@ -41,5 +41,7 @@ assert matched == naive.tolist(), "AQP must equal naive evaluation"
 print(f"matched {len(matched)} rows (== naive evaluation)")
 print("runtime statistics the router discovered:")
 for name, s in ex.stats_snapshot().items():
+    if name.startswith("_"):   # reserved sections (e.g. _arbiter counters)
+        continue
     print(f"  {name}: cost/row={s['cost_per_row']*1e6:.1f}us "
           f"selectivity={s['selectivity']:.2f}")

@@ -93,6 +93,7 @@ def main() -> None:
             print(f"  hsv_color kernel: cost/row={s['cost_per_row']*1e3:.3f}ms"
                   f" launches={int(s['batches'])}")
         print(f"  GACU active workers: {ex.active_worker_counts()}")
+        print(f"  arbiter (leases/releases/handoffs): {snap['_arbiter']}")
 
     assert results["cost-driven"] == results["reuse-aware"]
     expect = set(np.nonzero(person & nohat)[0].tolist())

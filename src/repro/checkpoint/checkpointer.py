@@ -104,6 +104,12 @@ class Checkpointer:
             self._pending.result()
             self._pending = None
 
+    def close(self) -> None:
+        """Drain pending saves and join the writer thread (non-daemon —
+        leaving it alive trips the test session's leaked-thread guard)."""
+        self.wait()
+        self._pool.shutdown(wait=True)
+
     # ----------------------------- restore ---------------------------- #
     def restore(self, step: int, target: Any = None) -> Any:
         """Restore step. ``target``: pytree of arrays or ShapeDtypeStructs

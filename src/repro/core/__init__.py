@@ -7,7 +7,9 @@ Public surface:
   UDF / Predicate                    — ML UDF wrappers (shape-bucketed)
   ReuseCache                         — §4.3 result reuse
   policies: CostDriven / ScoreDriven / SelectivityDriven / ReuseAware /
-            HydroPolicy; RoundRobin / DataAware / DeviceAlternating
+            HydroPolicy; RoundRobin / DataAware / DeviceAlternating;
+            PressureRanked / StaticPartition (arbiter)
+  DevicePool / ResourceArbiter       — §5.2 elastic cross-predicate leasing
   LaminarRouter (GACU) / EddyRouter / AQPExecutor — §3.2, §4, §5
   Query / optimize / PhysicalPlan    — §3.1 rule-based plan -> AQP plan
   SimClock / WallClock               — deterministic scheduling evaluation
@@ -19,16 +21,24 @@ from repro.core.executor import AQPExecutor  # noqa: F401
 from repro.core.laminar import GACU_MAX_WORKERS, LaminarRouter  # noqa: F401
 from repro.core.plan import PhysicalPlan, Query, TrivialPredicate, optimize  # noqa: F401
 from repro.core.policies import (  # noqa: F401
+    ArbiterPolicy,
     CostDriven,
     DataAware,
     DeviceAlternating,
     HydroPolicy,
+    PressureRanked,
     ReuseAware,
     RoundRobin,
     ScoreDriven,
     SelectivityDriven,
+    StaticPartition,
 )
 from repro.core.queues import BoundedQueue, CentralQueue  # noqa: F401
+from repro.core.resources import (  # noqa: F401
+    DRAIN_THRESHOLD_S,
+    DevicePool,
+    ResourceArbiter,
+)
 from repro.core.simclock import SimClock, WallClock  # noqa: F401
 from repro.core.stats import PredicateStats, StatsBoard  # noqa: F401
 from repro.core.udf import UDF, Predicate  # noqa: F401

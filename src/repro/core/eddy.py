@@ -15,6 +15,7 @@ routed in a possibly-suboptimal order before statistics exist.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, Iterable, List, Optional
 
 from repro.core.batch import RoutingBatch
@@ -24,20 +25,31 @@ from repro.core.policies import EddyPolicy
 from repro.core.queues import BoundedQueue, CentralQueue, ClosedError
 from repro.core.stats import StatsBoard
 from repro.core.udf import Predicate
+from repro.kernels import launch as kernel_launch
+
+# Circular-flow back-off during warmup (§4.1): a batch that cannot help
+# warmup is reinserted at the tail, and the router yields briefly so the
+# head->tail cycle doesn't hot-spin a 1-core host while the warmup
+# evaluations run on the worker threads.
+WARMUP_CIRCULATION_SLEEP_S = 0.0005
 
 
 class EddyPull(threading.Thread):
     """Pulls batches from the child iterator into the central queue."""
 
-    def __init__(self, source: Iterable[RoutingBatch], central: CentralQueue):
+    def __init__(self, source: Iterable[RoutingBatch], central: CentralQueue,
+                 *, launch_token=None):
         super().__init__(daemon=True, name="eddy-pull")
         self.source = source
         self.central = central
         self.injected = 0
         self.done = threading.Event()
         self.error: Optional[BaseException] = None
+        self.launch_token = launch_token
 
     def run(self) -> None:
+        if self.launch_token is not None:
+            kernel_launch.set_launch_context(self.launch_token)
         try:
             for batch in self.source:
                 self.injected += 1
@@ -66,6 +78,7 @@ class EddyRouter(threading.Thread):
         *,
         cache: Optional[ReuseCache] = None,
         warmup: bool = True,
+        launch_token=None,
     ):
         super().__init__(daemon=True, name="eddy-router")
         self.preds = preds
@@ -81,6 +94,7 @@ class EddyRouter(threading.Thread):
         self.error: Optional[BaseException] = None
         self._warmup_dispatched: set = set()
         self.circulations = 0
+        self.launch_token = launch_token
 
     # ------------------------------------------------------------------ #
     def _in_flight(self) -> int:
@@ -105,15 +119,17 @@ class EddyRouter(threading.Thread):
             # can't help warmup: circular delay (head -> tail, §4.1)
             self.circulations += 1
             self.central.put_worker(batch)
-            import time as _time
-
-            _time.sleep(0.0005)  # don't hot-spin the 1-core host
+            time.sleep(WARMUP_CIRCULATION_SLEEP_S)
             return
 
         ranked = self.policy.rank(batch, remaining, self.stats, self.cache)
         self.laminars[ranked[0].name].submit(batch)
 
     def run(self) -> None:
+        if self.launch_token is not None:
+            # warm_fn probes run on this thread (worker activation happens
+            # inside submit): tag it so those launches attribute here too
+            kernel_launch.set_launch_context(self.launch_token)
         try:
             while True:
                 if (

@@ -2,16 +2,24 @@
 into the executor of Fig. 2 and exposes the parent-executor pull interface
 (a blocking iterator over the output queue).
 
+Resource arbitration (§5.2): the executor creates a ResourceArbiter (or
+accepts a shared one) that owns every predicate's worker contexts and
+leases device slots to the Laminar routers — scale-up keeps the queue
+backpressure trigger, scale-down retires idle leases so capacity flows to
+the current bottleneck predicate. Reallocation counters are exposed in
+``stats_snapshot()`` under the reserved ``"_arbiter"`` key.
+
 Kernel cost visibility (§3.3): for the lifetime of a ``run()`` the executor
-registers ``launch.connect_stats_board(self.stats)``, so every Pallas
-launch a predicate makes reports its per-launch timing into the same
+registers ``launch.connect_stats_board(self.stats, token=...)``, so every
+Pallas launch a predicate makes reports its per-launch timing into the same
 StatsBoard the routing policies rank on — kernel UDF cost is profiled, not
-estimated, exactly like predicate-level cost. The hook is removed in
-``shutdown()`` so back-to-back executors never double-count each other's
-launches. The hook bus is process-global: two executors running
-CONCURRENTLY in one process would cross-record each other's kernel
-launches (no production path does this today; per-executor attribution
-needs launch-context tagging — see ROADMAP).
+estimated, exactly like predicate-level cost. The hook is THREAD-AFFINE:
+it is keyed by this executor's launch token, and every thread this executor
+owns (eddy pull, eddy router, predicate workers) tags itself with that
+token — so concurrent executors in one process each record only their own
+launches (per-executor attribution; the old process-global bus
+cross-recorded). The hook is removed in ``shutdown()`` so back-to-back
+executors never double-count either.
 """
 from __future__ import annotations
 
@@ -22,8 +30,11 @@ from repro.core.batch import RoutingBatch
 from repro.core.cache import ReuseCache
 from repro.core.eddy import EddyPull, EddyRouter
 from repro.core.laminar import GACU_MAX_WORKERS, LaminarRouter
-from repro.core.policies import EddyPolicy, HydroPolicy, LaminarPolicy, RoundRobin
+from repro.core.policies import (
+    ArbiterPolicy, EddyPolicy, HydroPolicy, LaminarPolicy, RoundRobin,
+)
 from repro.core.queues import BoundedQueue, CentralQueue, ClosedError
+from repro.core.resources import DRAIN_THRESHOLD_S, DevicePool, ResourceArbiter
 from repro.core.simclock import WallClock
 from repro.core.stats import StatsBoard
 from repro.core.udf import Predicate
@@ -47,6 +58,10 @@ class AQPExecutor:
         warmup: bool = True,
         output_capacity: int = 1024,
         cost_alpha: float = 0.3,
+        arbiter: Optional[ResourceArbiter] = None,
+        pool: Optional[DevicePool] = None,
+        arbiter_policy: Optional[ArbiterPolicy] = None,
+        drain_threshold: Optional[float] = DRAIN_THRESHOLD_S,
     ):
         self.predicates = predicates
         self.policy = policy or HydroPolicy()
@@ -57,27 +72,80 @@ class AQPExecutor:
         self.output = BoundedQueue(output_capacity)
         self._error_lock = threading.Lock()
         self._worker_error = None
-        self.laminars: Dict[str, LaminarRouter] = {
-            p.name: LaminarRouter(
-                p,
-                self.central,
-                self.stats,
-                cache=cache,
-                clock=self.clock,
-                policy=laminar_policy_factory(),
-                max_workers=max_workers,
-                devices=(devices or {}).get(p.name, (p.resource,)),
-                serial_fraction=serial_fraction,
-                on_error=self._on_worker_error,
+        # per-executor launch attribution token: every thread this executor
+        # owns tags itself with it, and the run()-lifetime stats hook only
+        # observes launches from so-tagged threads
+        self._launch_token = object()
+        # shared arbiter > shared pool > private unbounded pool (the
+        # private default reproduces the pre-arbiter per-predicate pools)
+        if arbiter is not None and (pool is not None or arbiter_policy is not None):
+            raise ValueError(
+                "pass either a pre-built arbiter OR pool/arbiter_policy "
+                "(a shared arbiter keeps its own pool and policy)"
             )
+        self.arbiter = arbiter or ResourceArbiter(
+            pool=pool, policy=arbiter_policy
+        )
+        pred_devices = {
+            p.name: tuple((devices or {}).get(p.name, (p.resource,)))
             for p in predicates
         }
+        self._check_pool_floors(pred_devices)
+        self.laminars: Dict[str, LaminarRouter] = {}
+        try:
+            for p in predicates:
+                self.laminars[p.name] = LaminarRouter(
+                    p,
+                    self.central,
+                    self.stats,
+                    cache=cache,
+                    clock=self.clock,
+                    policy=laminar_policy_factory(),
+                    max_workers=max_workers,
+                    devices=pred_devices[p.name],
+                    serial_fraction=serial_fraction,
+                    on_error=self._on_worker_error,
+                    arbiter=self.arbiter,
+                    drain_threshold=drain_threshold,
+                    launch_token=self._launch_token,
+                )
+        except BaseException:
+            # don't poison a shared arbiter with half a registration: the
+            # names registered before the failure must become reusable
+            for name in self.laminars:
+                self.arbiter.unregister(name)
+            raise
         self.warmup = warmup
         self._pull: Optional[EddyPull] = None
         self._router: Optional[EddyRouter] = None
         self._kernel_hook = None  # launch-timing hook, live only during run()
 
     # ------------------------------------------------------------------ #
+    def _check_pool_floors(self, pred_devices: Dict[str, Sequence[str]]) -> None:
+        """Fail fast on a pool that can never hold one floor slot per
+        predicate: floor leases never retire, so an undersized BOUNDED
+        pool is a guaranteed mid-query starvation, not a transient."""
+        cap = self.arbiter.pool.capacity_of
+        groups = {g for ds in pred_devices.values() for g in ds}
+        if any(cap(g) is None for g in groups):
+            return  # an unbounded group can absorb any floor demand
+        total = sum(cap(g) for g in groups)
+        if total < len(pred_devices):
+            raise ValueError(
+                f"DevicePool holds {total} slot(s) across {sorted(groups)} "
+                f"but {len(pred_devices)} predicates each need a one-worker "
+                "floor: the query would starve — size the pool to at least "
+                "one slot per predicate"
+            )
+        for g in groups:  # predicates pinned to a single group
+            pinned = [n for n, ds in pred_devices.items() if set(ds) == {g}]
+            if len(pinned) > cap(g):
+                raise ValueError(
+                    f"device group {g!r} has {cap(g)} slot(s) but "
+                    f"{len(pinned)} predicates ({sorted(pinned)}) can only "
+                    "run there: the query would starve"
+                )
+
     def _on_worker_error(self, exc, tb):
         with self._error_lock:
             if self._worker_error is None:
@@ -89,13 +157,19 @@ class AQPExecutor:
         """Execute; yields completed (non-empty) batches in completion order."""
         if self._kernel_hook is None:
             # Per-launch kernel timings feed the routing StatsBoard for the
-            # duration of the run; shutdown() deregisters.
-            self._kernel_hook = kernel_launch.connect_stats_board(self.stats)
-        self._pull = EddyPull(source, self.central)
+            # duration of the run — thread-affine on this executor's token,
+            # so a concurrently-running executor never cross-records.
+            # shutdown() deregisters.
+            self._kernel_hook = kernel_launch.connect_stats_board(
+                self.stats, token=self._launch_token
+            )
+        self._pull = EddyPull(source, self.central,
+                              launch_token=self._launch_token)
         self._router = EddyRouter(
             self.predicates, self.central, self.output, self.laminars,
             self.stats, self.policy, self._pull,
             cache=self.cache, warmup=self.warmup,
+            launch_token=self._launch_token,
         )
         self._pull.start()
         self._router.start()
@@ -133,11 +207,25 @@ class AQPExecutor:
 
     # ------------------------------ metrics ---------------------------- #
     def stats_snapshot(self):
-        return self.stats.snapshot()
+        """Predicate statistics plus arbiter reallocation counters.
+
+        Predicate entries are keyed by name as before; the reserved
+        ``"_arbiter"`` key carries lease/release/denial/handoff counters
+        (consumers iterating predicate entries should skip ``_``-keys)."""
+        snap = self.stats.snapshot()
+        snap["_arbiter"] = self.arbiter.counters()
+        return snap
 
     def active_worker_counts(self) -> Dict[str, int]:
         return {
             name: sum(1 for w in lam.workers if w.activated)
+            for name, lam in self.laminars.items()
+        }
+
+    def leased_worker_counts(self) -> Dict[str, int]:
+        """Current leases per predicate (the §5.2 allocation picture)."""
+        return {
+            name: len(lam.active_workers)
             for name, lam in self.laminars.items()
         }
 

@@ -1,12 +1,22 @@
 """Laminar router (§5): per-predicate elastic parallelism with GACU.
 
 Greedy-allocation-conservative-use: ``max_workers`` contexts per predicate
-are created up front (cheap — no compilation, no device buffers), but a
-worker only initializes when the router first routes a batch to it. The
-router activates an additional worker whenever every active worker's input
-queue is saturated (the utilization proxy: queue backpressure ==
-device-idle opportunity), up to the configured ceiling — "spawning through
-routing", no pipeline surgery mid-query.
+are created up front (cheap — no compilation, no device buffers) and owned
+by the ResourceArbiter; a worker only initializes when the router first
+routes a batch to it. Capacity is LEASED, not owned: the router claims a
+device slot from the arbiter whenever every active worker's input queue is
+saturated (the utilization proxy: queue backpressure == device-idle
+opportunity) up to the configured ceiling — "spawning through routing", no
+pipeline surgery mid-query.
+
+Scale-DOWN (§5.2): a worker whose queue has been idle past the drain
+threshold offers to retire (``_on_worker_idle``); the router accepts when
+it holds more than its one-worker floor, returning the slot to the
+DevicePool so ANOTHER predicate's router can claim it — cross-predicate
+reallocation, the paper's "dynamically allocates resources for evaluating
+predicates". By default each executor gets a private unbounded pool, which
+reproduces the pre-arbiter behavior exactly; contended deployments share a
+bounded pool (see benchmarks/bench_uc2_realloc.py).
 
 Device placement: workers are assigned to device groups round-robin at
 construction; the DeviceAlternating policy keeps consecutive batches on
@@ -14,17 +24,28 @@ alternating devices (the paper's GPU-aware load balancing when scaling out).
 """
 from __future__ import annotations
 
+import threading
+import time
 from typing import List, Optional, Sequence
 
 from repro.core.batch import RoutingBatch
 from repro.core.cache import ReuseCache
 from repro.core.policies import LaminarPolicy, RoundRobin
 from repro.core.queues import CentralQueue
+from repro.core.resources import DRAIN_THRESHOLD_S, ResourceArbiter
+from repro.core.simclock import SimClock
 from repro.core.stats import StatsBoard
 from repro.core.udf import Predicate
 from repro.core.worker import WorkerContext
 
 GACU_MAX_WORKERS = 50  # paper's hardcoded per-device ceiling
+
+# back-off while the floor lease is denied (shared pool fully claimed by
+# higher-pressure predicates); the submit loop retries until granted, and
+# raises after the deadline — a predicate that cannot hold even one worker
+# can never finish the query, and a loud error beats a silent hang
+_FLOOR_RETRY_SLEEP_S = 0.01
+FLOOR_STARVATION_DEADLINE_S = 10.0
 
 
 class LaminarRouter:
@@ -41,16 +62,30 @@ class LaminarRouter:
         devices: Sequence[str] = ("cpu",),
         serial_fraction: float = 0.0,
         on_error=None,
+        arbiter: Optional[ResourceArbiter] = None,
+        drain_threshold: Optional[float] = DRAIN_THRESHOLD_S,
+        launch_token=None,
     ):
         self.pred = pred
         self.stats = stats
         self.policy = policy or RoundRobin()
         self.clock = clock
         self.max_workers = max(1, max_workers)
-        # GREEDY allocation of worker contexts (lazy until first batch):
-        self.workers: List[WorkerContext] = [
-            WorkerContext(
+        self.arbiter = arbiter or ResourceArbiter()
+        self.retirements = 0
+        if isinstance(clock, SimClock):
+            # wall-clock queue idleness is meaningless in virtual time and
+            # would make the deterministic timelines depend on real thread
+            # scheduling: scale-down is wall-clock-only (a virtual-idle
+            # drain path is future work — see ROADMAP)
+            drain_threshold = None
+        self._lock = threading.RLock()
+        self._active: List[WorkerContext] = []
+
+        def _factory(i: int) -> WorkerContext:
+            return WorkerContext(
                 wid=f"{pred.name}#{i}",
+                index=i,
                 pred=pred,
                 central=central,
                 stats=stats,
@@ -59,47 +94,156 @@ class LaminarRouter:
                 device_group=devices[i % len(devices)],
                 serial_fraction=serial_fraction,
                 on_error=on_error,
+                idle_timeout=drain_threshold,
+                on_idle=self._on_worker_idle,
+                launch_token=launch_token,
             )
-            for i in range(self.max_workers)
-        ]
-        self.active_n = 1  # CONSERVATIVE use: start with a single worker
+
+        # GREEDY allocation of worker contexts (lazy until first batch),
+        # owned by the arbiter while registered; the router keeps its own
+        # reference for inspection so a long-lived shared arbiter does not
+        # accumulate dead executors' contexts after unregister(). The
+        # floor slot is leased lazily on the first submit — a constructed
+        # but never-run executor must not hold shared-pool capacity.
+        self._contexts = self.arbiter.register(
+            pred.name, num_workers=self.max_workers,
+            factory=_factory, stats=stats, clock=clock,
+        )
 
     # ------------------------------------------------------------------ #
     @property
-    def active_workers(self) -> List[WorkerContext]:
-        return self.workers[: self.active_n]
+    def workers(self) -> List[WorkerContext]:
+        """All greedily-allocated contexts (leased or not)."""
+        return list(self._contexts)
 
-    def _maybe_scale_up(self, batch: RoutingBatch) -> None:
-        """Activate one more context under saturation.
+    @property
+    def active_workers(self) -> List[WorkerContext]:
+        with self._lock:
+            return list(self._active)
+
+    def _insert(self, w: WorkerContext) -> None:
+        self._active.append(w)
+        self._active.sort(key=lambda c: c.index)  # deterministic order
+
+    def _ensure_floor(self) -> None:
+        """Hold at least one lease (retry happens in the submit loop)."""
+        with self._lock:
+            if not self._active:
+                w = self.arbiter.lease(self.pred.name)
+                if w is not None:
+                    self._insert(w)
+
+    def _on_worker_idle(self, w: WorkerContext) -> bool:
+        """Scale-down handshake (called from the worker's own thread).
+
+        True == retire: the lease is released and the calling thread must
+        exit immediately. All bookkeeping happens under the router lock,
+        so no batch can be routed to ``w`` concurrently with retirement —
+        and a batch that raced into the queue before we took the lock
+        vetoes it."""
+        with self._lock:
+            if not self.arbiter.scale_down_enabled:
+                return False
+            if w not in self._active or len(self._active) <= 1:
+                return False  # never drop below the one-worker floor
+            if w.pinned > 0:
+                return False  # a submit is in flight toward this worker
+            if len(w.queue) > 0:
+                return False  # a batch raced in: keep serving
+            self._active.remove(w)
+            w.activated = False     # re-leasable: activate() restarts
+            w._thread = None
+            self.arbiter.release(self.pred.name, w)
+            self.retirements += 1
+            return True
+
+    def _maybe_scale_up(self, batch: RoutingBatch):
+        """Lease one more slot under saturation; returns the new worker.
 
         WallClock: queue backpressure (all active input queues full).
         SimClock: deterministic — every active worker's virtual busy
         horizon is past the batch's virtual arrival, i.e. the batch would
-        WAIT (the utilization proxy the paper reads from the device)."""
-        if self.active_n >= self.max_workers:
-            return
-        from repro.core.simclock import SimClock
+        WAIT (the utilization proxy the paper reads from the device).
 
-        if isinstance(self.clock, SimClock):
-            if all(
-                self.clock.resource_busy_until(w.wid) > batch.sim_ready
-                for w in self.active_workers
-            ):
-                self.active_n += 1
-        elif all(len(w.queue) >= w.queue.capacity for w in self.active_workers):
-            self.active_n += 1
+        The caller must ``activate()`` the returned worker (OUTSIDE this
+        router's lock — activation may warm-compile a kernel): a scale-up
+        lease is granted under live traffic, and only an activated worker
+        has the idle timer that can retire it — a leased-but-threadless
+        context would strand its slot if the stream dried up before a
+        batch was routed to it."""
+        with self._lock:
+            active = self._active
+            if not active or len(active) >= self.max_workers:
+                return None
+            if isinstance(self.clock, SimClock):
+                saturated = all(
+                    self.clock.resource_busy_until(w.wid) > batch.sim_ready
+                    for w in active
+                )
+            else:
+                saturated = all(
+                    len(w.queue) >= w.queue.capacity for w in active
+                )
+            if not saturated:
+                return None
+            w = self.arbiter.lease(self.pred.name)
+            if w is not None:
+                self._insert(w)
+            return w
 
     def submit(self, batch: RoutingBatch) -> None:
         """Route a batch to a worker (blocking; scales up under saturation)."""
+        # data-aware proxy load (§5.3), computed OUTSIDE the router lock:
+        # it reduces over the batch's columns and must not serialize
+        # against worker retirement callbacks
+        load = self.pred.udf.proxy(
+            {c: batch.data[c] for c in self.pred.udf.columns}
+        ) if batch.rows else 0.0
+        starved_since = None
         while True:
-            self._maybe_scale_up(batch)
-            worker = self.policy.choose(self.active_workers, batch, self.stats)
-            # proactive load accounting for the data-aware policy (§5.3)
-            load = self.pred.udf.proxy(
-                {c: batch.data[c] for c in self.pred.udf.columns}
-            ) if batch.rows else 0.0
-            self.stats.add_load(worker.wid, load)
-            if worker.submit(batch, timeout=0.05):
+            self._ensure_floor()
+            grown = self._maybe_scale_up(batch)
+            if grown is not None:
+                # lock-free: activation may warm-compile (GACU ensure_ready)
+                # and must not serialize against retirement callbacks; only
+                # the eddy thread calls submit, so this cannot race itself
+                grown.activate()
+            with self._lock:
+                workers = list(self._active)
+                if workers:
+                    worker = self.policy.choose(workers, batch, self.stats)
+                    # proactive load accounting; PIN the chosen worker
+                    # under the lock so its lease cannot retire while the
+                    # (possibly blocking) queue put below runs lock-free
+                    self.stats.add_load(worker.wid, load)
+                    worker.pinned += 1
+                else:
+                    worker = None  # floor lease denied: back off, retry
+            if worker is None:
+                now = time.monotonic()
+                if starved_since is None:
+                    starved_since = now
+                elif now - starved_since > FLOOR_STARVATION_DEADLINE_S:
+                    # e.g. a bounded shared pool fully held by rivals under
+                    # a policy that never releases (StaticPartition): this
+                    # predicate can never run, so the query can never
+                    # finish — surface it instead of spinning silently
+                    raise RuntimeError(
+                        f"predicate {self.pred.name!r} starved: floor "
+                        f"lease denied for {FLOOR_STARVATION_DEADLINE_S}s "
+                        f"(device pool exhausted by other predicates and "
+                        f"nothing scaled down); arbiter counters: "
+                        f"{self.arbiter.counters()}"
+                    )
+                time.sleep(_FLOOR_RETRY_SLEEP_S)
+                continue
+            starved_since = None
+            try:
+                ok = worker.submit(batch, timeout=0.05)
+            finally:
+                with self._lock:
+                    worker.pinned -= 1
+            if ok:
                 return
             # queue full: undo accounting, scale, retry
             self.stats.finish_load(worker.wid, load)
@@ -110,3 +254,8 @@ class LaminarRouter:
     def stop(self) -> None:
         for w in self.workers:
             w.stop()
+        self.arbiter.unregister(self.pred.name)
+        with self._lock:
+            # the arbiter released every slot above: reporting the old
+            # active list would fabricate leases that no longer exist
+            self._active = []

@@ -23,6 +23,11 @@ LAMINAR policies pick a worker for a batch:
                         proactively at enqueue (§5.3).
   * DeviceAlternating — alternate device groups on consecutive batches
                         (the paper's GPU-aware routing, §5.1 scaling out).
+
+ARBITER policies decide which predicate a contended device slot goes to
+(§5.2 dynamic resource allocation; see core/resources.py):
+  * PressureRanked    — default: highest measured cost x queue-depth wins.
+  * StaticPartition   — ablation: fixed per-predicate quota, no scale-down.
 """
 from __future__ import annotations
 
@@ -238,6 +243,68 @@ class StickyDevice(LaminarPolicy):
         return group[next(inner) % len(group)]
 
 
+# --------------------------------------------------------------------------- #
+# Arbiter policies (§5.2 dynamic resource allocation)                          #
+# --------------------------------------------------------------------------- #
+class ArbiterPolicy:
+    """Arbitrates device-slot leases between predicate claimants.
+
+    ``grant`` is consulted by ``ResourceArbiter.lease`` for every non-floor
+    request (a claimant's FIRST lease always bypasses arbitration — the
+    no-starvation floor). ``scale_down`` gates the drain-threshold retire
+    path: a policy that forbids it reproduces pools that only grow."""
+
+    name = "base"
+    scale_down = True
+
+    def grant(self, requester: str, *, pressures, wants, held) -> bool:
+        """May ``requester`` take a free slot right now?
+
+        pressures: claimant -> measured cost x queue-depth pressure
+        wants:     claimant -> was recently denied (a live, standing claim)
+        held:      claimant -> leases currently held
+        """
+        raise NotImplementedError
+
+
+class PressureRanked(ArbiterPolicy):
+    """Default: the slot goes to the highest-pressure standing claimant.
+
+    Pressure is profiled cost/row x queue depth from the StatsBoard (§3.3:
+    collected DURING execution — the GRACEFUL argument for profiled over
+    estimated UDF cost). A requester outranked by a rival with a standing
+    denied claim steps aside; rivals whose pressure has since drained to or
+    below the requester's no longer block (stale wants are harmless because
+    pressures are always read live)."""
+
+    name = "pressure"
+
+    def grant(self, requester, *, pressures, wants, held):
+        rivals = [n for n, w in wants.items() if w and n != requester]
+        if not rivals:
+            return True
+        mine = pressures.get(requester, 0.0)
+        return all(pressures.get(n, 0.0) <= mine for n in rivals)
+
+
+class StaticPartition(ArbiterPolicy):
+    """Ablation: the pre-arbiter behavior — a fixed per-predicate quota,
+    no scale-down, no cross-predicate reallocation. ``quota=None`` means
+    each predicate is limited only by its own ``max_workers`` ceiling
+    (exactly the old private pools)."""
+
+    name = "static"
+    scale_down = False
+
+    def __init__(self, quota: Optional[int] = None):
+        self.quota = quota
+
+    def grant(self, requester, *, pressures, wants, held):
+        if self.quota is None:
+            return True
+        return held.get(requester, 0) < self.quota
+
+
 EDDY_POLICIES = {
     p.name: p for p in (CostDriven, ScoreDriven, SelectivityDriven, ReuseAware, HydroPolicy)
 }
@@ -245,3 +312,4 @@ EDDY_POLICIES_EXT = dict(EDDY_POLICIES, content=ContentBased)
 LAMINAR_POLICIES = {
     p.name: p for p in (RoundRobin, DataAware, DeviceAlternating, StickyDevice)
 }
+ARBITER_POLICIES = {p.name: p for p in (PressureRanked, StaticPartition)}

@@ -85,6 +85,35 @@ class SimClock:
         with self._lock:
             return self._free.get(resource, 0.0)
 
+    def release_horizon(self, resource: str) -> float:
+        """Detach and return a retiring lease's busy horizon (§5.2).
+
+        The outstanding virtual work now belongs to the released SLOT, not
+        the retired worker: clearing the worker's entry means a later
+        re-lease of the same context starts from the slot's inherited
+        horizon — never from a stale copy of work that was already handed
+        off (which would double-count it)."""
+        with self._lock:
+            return self._free.pop(resource, 0.0)
+
+    def seed_horizon(self, resource: str, until: float) -> None:
+        """Seed a new lease holder with its slot's inherited busy horizon.
+
+        The slot models one physical execution context, so the new lease
+        cannot start before the previous holder's outstanding virtual work
+        drains — this is what keeps the deterministic Fig. 7 / UC3
+        timelines exact across cross-predicate reallocation. The value is
+        carried on the Slot itself (recorded by ``release_horizon``), so
+        the transfer also works when two executors with separate SimClocks
+        share one DevicePool."""
+        with self._lock:
+            if until > self._free.get(resource, 0.0):
+                self._free[resource] = until
+
+    def lease_handoff(self, frm: str, to: str) -> None:
+        """Same-clock convenience: MOVE ``frm``'s horizon onto ``to``."""
+        self.seed_horizon(to, self.release_horizon(frm))
+
     def busy_time(self, resource: str) -> float:
         """Cumulative occupied seconds (utilization numerator, Fig 12)."""
         with self._lock:
@@ -92,5 +121,7 @@ class SimClock:
 
     @property
     def makespan(self) -> float:
+        # _now tracks the max finish ever scheduled, so the makespan
+        # survives released leases detaching their _free entries
         with self._lock:
-            return max(self._free.values(), default=self._now)
+            return max([self._now, *self._free.values()])

@@ -91,6 +91,15 @@ class PredicateStats:
                 return default
             return 1.0 - self.wins / self.tickets
 
+    def pressure(self, queue_depth: int) -> float:
+        """Resource-arbitration pressure: measured cost/row x queue depth.
+
+        The ResourceArbiter ranks slot claimants on this (§5.2): a
+        predicate whose PROFILED cost is high and whose queues are deep is
+        the current bottleneck and wins contended capacity. A drained
+        predicate (depth 0) exerts no pressure regardless of cost."""
+        return self.cost() * max(0, queue_depth)
+
     def cache_hit_rate(self) -> float:
         with self._lock:
             if self.cache_probes == 0:

@@ -1,4 +1,4 @@
-"""Predicate workers (§3.2 step 5, §5.1 GACU).
+"""Predicate workers (§3.2 step 5, §5.1 GACU, §5.2 elastic leases).
 
 A WorkerContext is pre-created greedily but allocates nothing until the
 first batch is routed to it ("spawning through routing"). Evaluation:
@@ -6,6 +6,18 @@ cache probe -> compute only misses (bucketed) -> mask -> eager
 materialization -> reinsert into the central queue. Timing goes through the
 Clock abstraction so the identical code path runs wall-clock (production)
 or simulated (deterministic scheduling benchmarks).
+
+Elastic lifecycle (§5.2): a worker holds a *lease* on a device slot (see
+core/resources.py). When its input queue has been idle past
+``idle_timeout`` seconds it offers to retire via ``on_idle``; if the
+router accepts (scale-down), the thread exits and the slot returns to the
+DevicePool for another predicate to claim. A retired context can be
+re-leased later — ``activate()`` simply starts a fresh thread.
+
+Per-executor launch attribution: each worker thread tags itself with its
+executor's ``launch_token`` so kernel-launch timing hooks registered by
+that executor (thread-affine, see kernels/launch.py) only observe its own
+launches — concurrent executors in one process never cross-record.
 """
 from __future__ import annotations
 
@@ -13,7 +25,7 @@ import threading
 import time
 import traceback
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -23,6 +35,7 @@ from repro.core.queues import BoundedQueue, CentralQueue, ClosedError
 from repro.core.simclock import SimClock, WallClock
 from repro.core.stats import StatsBoard
 from repro.core.udf import Predicate
+from repro.kernels import launch as kernel_launch
 
 
 def evaluate_predicate(
@@ -107,7 +120,12 @@ def evaluate_predicate(
 
 @dataclass
 class WorkerContext:
-    """GACU worker: greedy allocation, conservative (lazy) use."""
+    """GACU worker: greedy allocation, conservative (lazy) use.
+
+    ``index`` is the context's position in its predicate's greedy
+    allocation (stable activation order); ``idle_timeout``/``on_idle``
+    implement the §5.2 scale-down handshake; ``launch_token`` tags the
+    worker thread for per-executor kernel-launch attribution."""
 
     wid: str
     pred: Predicate
@@ -122,9 +140,20 @@ class WorkerContext:
     batches_done: int = 0
     _thread: Optional[threading.Thread] = None
     on_error: Optional[object] = None
+    index: int = 0
+    idle_timeout: Optional[float] = None
+    on_idle: Optional[Callable[["WorkerContext"], bool]] = None
+    launch_token: Optional[object] = None
+    # submits in flight (set under the router lock): a pinned worker must
+    # not retire, or the in-flight batch would land in a dead queue
+    pinned: int = 0
 
     def activate(self) -> None:
-        """Called by the Laminar router when the first batch is routed here."""
+        """Called by the Laminar router when the first batch is routed here.
+
+        Re-entrant across retirement: a context whose lease was retired
+        (thread exited, ``activated`` reset by the router) starts a fresh
+        thread on the next routed batch."""
         if self.activated:
             return
         self.activated = True
@@ -138,9 +167,22 @@ class WorkerContext:
         return self.queue.put(batch, timeout)
 
     def _run(self) -> None:
+        if self.launch_token is not None:
+            # thread-affine launch attribution: kernel timing hooks keyed
+            # by this executor's token observe this thread's launches only
+            kernel_launch.set_launch_context(self.launch_token)
         while True:
             try:
-                batch = self.queue.get()
+                batch = self.queue.get(timeout=self.idle_timeout)
+            except TimeoutError:
+                # queue idle past the drain threshold: offer to retire.
+                # The router decides under its own lock (floor of one
+                # worker, queue still empty, policy allows scale-down) and
+                # performs all bookkeeping before we return — after a True
+                # verdict this thread must touch nothing and exit.
+                if self.on_idle is not None and self.on_idle(self):
+                    return
+                continue
             except ClosedError:
                 return
             try:

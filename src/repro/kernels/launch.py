@@ -35,6 +35,17 @@ pinned JAX. This module owns all of it:
     every other predicate (§3.3: statistics are collected DURING
     execution, never a-priori). With no hooks registered the wrapper adds
     no synchronization and no overhead.
+
+    Hooks come in two scopes. GLOBAL hooks (``add_launch_hook(fn)``)
+    observe every launch in the process — the right tool for tests and
+    ad-hoc profiling. TOKEN hooks (``add_launch_hook(fn, token=...)``)
+    are *thread-affine*: they fire only for launches made on threads that
+    tagged themselves with the same token via ``set_launch_context`` /
+    ``launch_context``. AQPExecutor registers its stats hook under its own
+    token and tags every thread it owns, so two executors running
+    CONCURRENTLY in one process each record only their own kernel
+    launches (per-executor attribution — the old process-global bus
+    cross-recorded).
 """
 from __future__ import annotations
 
@@ -53,11 +64,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "AxisType", "CompilerParams", "LaunchEvent", "SMEM", "VMEM",
-    "add_launch_hook", "compiler_params", "connect_stats_board",
-    "default_interpret", "install_forward_compat", "launch_hooks",
+    "add_launch_hook", "clear_launch_context", "compiler_params",
+    "connect_stats_board", "current_launch_context", "default_interpret",
+    "install_forward_compat", "launch_context", "launch_hooks",
     "make_mesh", "pallas_call", "remove_launch_hook",
-    "resolve_compiler_params_cls", "resolve_impl", "shard_map",
-    "stats_board_hook",
+    "resolve_compiler_params_cls", "resolve_impl", "set_launch_context",
+    "shard_map", "stats_board_hook",
 ]
 
 
@@ -293,19 +305,58 @@ class LaunchEvent:
 
 
 _HOOKS: List[Callable[[LaunchEvent], None]] = []
+_TOKEN_HOOKS: dict = {}  # launch-context token -> [hooks]
 _HOOKS_LOCK = threading.Lock()
+
+# Thread-affine launch context: a worker/eddy thread tags itself with its
+# executor's token; token-scoped hooks fire only for launches made on
+# matching threads (per-executor attribution).
+_TLS = threading.local()
+
+
+def set_launch_context(token) -> None:
+    """Tag the CURRENT thread's launches with ``token`` (None = untagged)."""
+    _TLS.token = token
+
+
+def clear_launch_context() -> None:
+    _TLS.token = None
+
+
+def current_launch_context():
+    return getattr(_TLS, "token", None)
+
+
+@contextmanager
+def launch_context(token):
+    """Scoped ``set_launch_context`` that restores the previous tag."""
+    prev = current_launch_context()
+    set_launch_context(token)
+    try:
+        yield
+    finally:
+        set_launch_context(prev)
 
 
 def _snapshot_hooks() -> List[Callable[[LaunchEvent], None]]:
-    if not _HOOKS:  # fast path: no lock, no timing overhead
+    if not _HOOKS and not _TOKEN_HOOKS:  # fast path: no lock, no overhead
         return []
+    token = current_launch_context()
     with _HOOKS_LOCK:
-        return list(_HOOKS)
+        hooks = list(_HOOKS)
+        if token is not None:
+            hooks.extend(_TOKEN_HOOKS.get(token, ()))
+        return hooks
 
 
-def add_launch_hook(fn: Callable[[LaunchEvent], None]):
+def add_launch_hook(fn: Callable[[LaunchEvent], None], *, token=None):
+    """Register a hook; with ``token``, only launches from threads tagged
+    with the same launch context (``set_launch_context``) are observed."""
     with _HOOKS_LOCK:
-        _HOOKS.append(fn)
+        if token is None:
+            _HOOKS.append(fn)
+        else:
+            _TOKEN_HOOKS.setdefault(token, []).append(fn)
     return fn
 
 
@@ -313,6 +364,11 @@ def remove_launch_hook(fn: Callable[[LaunchEvent], None]) -> None:
     with _HOOKS_LOCK:
         if fn in _HOOKS:
             _HOOKS.remove(fn)
+        for token, hooks in list(_TOKEN_HOOKS.items()):
+            if fn in hooks:
+                hooks.remove(fn)
+            if not hooks:
+                del _TOKEN_HOOKS[token]
 
 
 @contextmanager
@@ -347,6 +403,10 @@ def stats_board_hook(board) -> Callable[[LaunchEvent], None]:
     return hook
 
 
-def connect_stats_board(board) -> Callable[[LaunchEvent], None]:
-    """Register (and return, for later removal) a stats-board hook."""
-    return add_launch_hook(stats_board_hook(board))
+def connect_stats_board(board, *, token=None) -> Callable[[LaunchEvent], None]:
+    """Register (and return, for later removal) a stats-board hook.
+
+    With ``token``, the hook is thread-affine: only launches from threads
+    tagged with that launch context reach ``board`` — how concurrent
+    executors keep per-executor attribution."""
+    return add_launch_hook(stats_board_hook(board), token=token)

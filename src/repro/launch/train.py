@@ -100,7 +100,7 @@ def train_loop(
     finally:
         pf.stop()
         if ckpt is not None:
-            ckpt.wait()
+            ckpt.close()  # drain + join the writer (leaked-thread guard)
     return {
         "final_loss": losses[-1] if losses else float("nan"),
         "losses": losses,

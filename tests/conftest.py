@@ -1,5 +1,6 @@
 import os
 import sys
+import threading
 
 # tests see the REAL device count (1 CPU device) — the 512-device flag is
 # set ONLY inside launch/dryrun.py (and subprocess tests that exec it).
@@ -12,3 +13,33 @@ import pytest  # noqa: E402
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+# --------------------------------------------------------------------------- #
+# Leaked-thread guard: retired worker leases (and any other background
+# machinery) must not leave live NON-DAEMON threads behind — a forgotten
+# join would hang interpreter exit. The session FAILS if the live
+# non-daemon thread count grew between session start and finish.
+# --------------------------------------------------------------------------- #
+def _live_nondaemon_threads():
+    return [t for t in threading.enumerate() if t.is_alive() and not t.daemon]
+
+
+def pytest_sessionstart(session):
+    session.config._nondaemon_baseline = len(_live_nondaemon_threads())
+
+
+def pytest_sessionfinish(session, exitstatus):
+    baseline = getattr(session.config, "_nondaemon_baseline", None)
+    if baseline is None:
+        return
+    leaked = _live_nondaemon_threads()
+    if len(leaked) > baseline:
+        names = sorted(t.name for t in leaked)
+        sys.stderr.write(
+            "\nLEAKED-THREAD GUARD: live non-daemon thread count grew "
+            f"from {baseline} to {len(leaked)} across the test session: "
+            f"{names}\n(a retired worker lease or thread pool was not "
+            "joined/shut down)\n"
+        )
+        session.exitstatus = 3

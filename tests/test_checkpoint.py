@@ -32,13 +32,16 @@ def test_roundtrip(tmp_path):
 
 def test_async_save_and_keep_k(tmp_path):
     ck = Checkpointer(str(tmp_path), keep=2, async_save=True)
-    for s in (1, 2, 3, 4):
-        ck.save(s, _tree())
-    ck.wait()
-    steps = sorted(
-        int(n.split("_")[1]) for n in os.listdir(tmp_path) if n.startswith("step_")
-    )
-    assert steps == [3, 4]
+    try:
+        for s in (1, 2, 3, 4):
+            ck.save(s, _tree())
+        ck.wait()
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(tmp_path) if n.startswith("step_")
+        )
+        assert steps == [3, 4]
+    finally:
+        ck.close()  # join the writer thread (leaked-thread guard)
 
 
 def test_tmp_dirs_ignored(tmp_path):

@@ -83,14 +83,20 @@ def test_executor_populates_stats_board_with_kernel_costs():
 # --------------------------------------------------------------------------- #
 # (c): hook lifecycle                                                         #
 # --------------------------------------------------------------------------- #
+def _total_hooks():
+    """Live hooks across BOTH registries — the executor's run()-lifetime
+    hook is token-scoped (_TOKEN_HOOKS), not global (_HOOKS)."""
+    return len(launch._HOOKS) + sum(map(len, launch._TOKEN_HOOKS.values()))
+
+
 def test_hook_deregistered_after_run_and_no_double_count():
     data = _dataset()
     preds = _make_preds()
-    hooks_before = len(launch._HOOKS)
+    hooks_before = _total_hooks()
 
     ex1 = AQPExecutor(preds, policy=CostDriven(), max_workers=2)
     list(ex1.run(iter(_batches(data))))
-    assert len(launch._HOOKS) == hooks_before, "run() leaked its launch hook"
+    assert _total_hooks() == hooks_before, "run() leaked its launch hook"
     assert ex1._kernel_hook is None
 
     snap1 = ex1.stats_snapshot()
@@ -109,7 +115,7 @@ def test_hook_deregistered_after_run_and_no_double_count():
     for k, v in launches1.items():
         assert snap2[k]["batches"] > 0
         assert ex1.stats_snapshot()[k]["batches"] == v, "double-counted"
-    assert len(launch._HOOKS) == hooks_before
+    assert _total_hooks() == hooks_before
 
 
 def test_hook_deregistered_when_worker_raises():
@@ -118,12 +124,12 @@ def test_hook_deregistered_when_worker_raises():
 
     bad = udfs.planted_predicate("ok", range(5), cost_per_row=1e-4)
     bad.udf.fn = boom
-    hooks_before = len(launch._HOOKS)
+    hooks_before = _total_hooks()
     ex = AQPExecutor([bad], max_workers=1)
     batches = [make_batch({"rid": np.arange(5)}, np.arange(5))]
     with pytest.raises(RuntimeError, match="planted failure"):
         list(ex.run(iter(batches)))
-    assert len(launch._HOOKS) == hooks_before
+    assert _total_hooks() == hooks_before
     assert ex._kernel_hook is None
 
 

@@ -1,0 +1,438 @@
+"""Elastic resource arbiter (core/resources.py): device-slot leasing,
+pressure-ranked arbitration, scale-down retirement, cross-predicate slot
+handoff (with SimClock horizon inheritance), and the thread-affine launch
+attribution that keeps concurrent executors from cross-recording kernel
+timings — the two closed ROADMAP residuals."""
+import threading
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AQPExecutor, DevicePool, Predicate, PressureRanked, ResourceArbiter,
+    SimClock, StaticPartition, UDF, make_batch,
+)
+from repro.core.stats import StatsBoard
+
+
+def _fake_factory(name):
+    def factory(i):
+        return SimpleNamespace(wid=f"{name}#{i}", index=i,
+                               device_group="g", queue=[])
+    return factory
+
+
+def _register(arb, name, n=3, board=None, clock=None):
+    arb.register(name, num_workers=n, factory=_fake_factory(name),
+                 stats=board, clock=clock)
+
+
+def _pred(name, *, sleep=0.0):
+    def fn(d):
+        if sleep:
+            time.sleep(sleep)
+        return np.ones(len(d["x"]), bool)
+
+    udf = UDF(name + "_udf", fn=fn, columns=("x",))
+    return Predicate(name, udf, compare=lambda o: o.astype(bool))
+
+
+def _batches(n, per=10):
+    return [make_batch({"x": np.ones((per, 4))}, np.arange(i, i + per))
+            for i in range(0, n, per)]
+
+
+# --------------------------------------------------------------------------- #
+# DevicePool                                                                  #
+# --------------------------------------------------------------------------- #
+def test_device_pool_capacity_and_lifo_reissue():
+    pool = DevicePool({"tpu:0": 2})
+    s1 = pool.try_acquire("tpu:0")
+    s2 = pool.try_acquire("tpu:0")
+    assert s1 is not None and s2 is not None
+    assert pool.try_acquire("tpu:0") is None       # bounded group exhausted
+    assert pool.in_use("tpu:0") == 2
+    pool.release(s2)
+    assert pool.try_acquire("tpu:0") is s2          # LIFO: warmest slot first
+    # unlisted groups are unbounded by default (pre-arbiter behavior)
+    assert all(pool.try_acquire("cpu") is not None for _ in range(100))
+
+
+def test_device_pool_default_capacity_bounds_unlisted_groups():
+    pool = DevicePool(default_capacity=1)
+    assert pool.try_acquire("anything") is not None
+    assert pool.try_acquire("anything") is None
+
+
+# --------------------------------------------------------------------------- #
+# Arbiter: lease lifecycle + cross-predicate handoff                          #
+# --------------------------------------------------------------------------- #
+def test_released_lease_claimable_by_another_predicate():
+    """The §5.2 core: a slot retired by one predicate is claimable by
+    another predicate's router (ROADMAP reallocation residual)."""
+    arb = ResourceArbiter(pool=DevicePool({"g": 1}))
+    _register(arb, "a")
+    _register(arb, "b")
+
+    wa = arb.lease("a")
+    assert wa is not None                  # floor lease for a
+    assert arb.lease("b") is None          # pool exhausted: b denied
+    assert arb.counters()["denials"] == 1
+
+    arb.release("a", wa)                   # a drains, slot returns
+    wb = arb.lease("b")
+    assert wb is not None                  # b claims the released slot
+    c = arb.counters()
+    assert c["cross_pred_handoffs"] == 1
+    assert c["leases"] == 2 and c["releases"] == 1
+
+
+def test_lease_at_own_ceiling_returns_none():
+    arb = ResourceArbiter()
+    _register(arb, "a", n=2)
+    assert arb.lease("a") is not None
+    assert arb.lease("a") is not None
+    assert arb.lease("a") is None          # all contexts leased
+
+
+def test_unregister_returns_all_slots():
+    pool = DevicePool({"g": 2})
+    arb = ResourceArbiter(pool=pool)
+    _register(arb, "a")
+    arb.lease("a")
+    arb.lease("a")
+    assert pool.in_use("g") == 2
+    arb.unregister("a")
+    assert pool.in_use("g") == 0
+    # the registration (contexts included) is dropped: a long-lived shared
+    # arbiter must not accumulate dead executors' worker graphs
+    assert arb.contexts("a") == []
+    assert arb.lease("a") is None          # unregistered: no lease, no raise
+
+
+def test_reregister_after_unregister_reuses_shared_arbiter():
+    """Sequential executors may reuse a shared arbiter: a name
+    re-registers only after unregister; a currently-registered name is
+    rejected outright (silent replacement would cross-wire pipelines)."""
+    arb = ResourceArbiter(pool=DevicePool({"g": 1}))
+    _register(arb, "a")
+    with pytest.raises(ValueError, match="already registered"):
+        _register(arb, "a")               # even with zero live leases
+    w = arb.lease("a")
+    arb.release("a", w)
+    arb.unregister("a")
+    _register(arb, "a", n=2)               # fresh registration succeeds
+    assert len(arb.contexts("a")) == 2
+    assert arb.lease("a") is not None
+
+
+def test_concurrent_executors_cannot_share_arbiter_with_same_names():
+    """The cross-wiring hazard is rejected at CONSTRUCTION of the second
+    executor, not discovered as a hang at run time."""
+    arb = ResourceArbiter()
+    AQPExecutor([_pred("p")], arbiter=arb)
+    with pytest.raises(ValueError, match="already registered"):
+        AQPExecutor([_pred("p")], arbiter=arb)
+
+
+# --------------------------------------------------------------------------- #
+# Arbitration policies                                                        #
+# --------------------------------------------------------------------------- #
+def test_pressure_ranked_grants_highest_pressure_claimant():
+    board = StatsBoard(["a", "b", "c"])
+    board["b"].cost_per_row.update(1.0)    # b is expensive; a is ~free
+    arb = ResourceArbiter(pool=DevicePool({"g": 3}),
+                          policy=PressureRanked())
+    for name in ("a", "b", "c"):
+        _register(arb, name, board=board)
+
+    wc = arb.lease("c")
+    wa = arb.lease("a")
+    wb = arb.lease("b")                    # pool now full
+    wb.queue.extend([1, 2, 3])             # b: deep queue -> high pressure
+    assert arb.lease("a") is None          # denied (pool full), a now wants
+    assert arb.lease("b") is None          # denied (pool full), b now wants
+    assert arb.pressure_of("b") > arb.pressure_of("a")
+
+    arb.release("c", wc)                   # one slot frees up
+    assert arb.lease("a") is None          # outranked by b's standing claim
+    assert arb.lease("b") is not None      # highest pressure wins the slot
+    assert arb.counters()["cross_pred_handoffs"] == 1
+    assert wa is not None
+
+
+def test_pressure_ranking_is_device_group_scoped():
+    """A rival's standing claim on an EXHAUSTED group must not block a
+    requester's free capacity on a disjoint group."""
+    board = StatsBoard(["gpu_pred", "cpu_pred"])
+    board["gpu_pred"].cost_per_row.update(1.0)
+    arb = ResourceArbiter(pool=DevicePool({"gpu": 1, "cpu": 4}),
+                          policy=PressureRanked())
+
+    def gpu_factory(i):
+        return SimpleNamespace(wid=f"gpu_pred#{i}", index=i,
+                               device_group="gpu", queue=[])
+
+    arb.register("gpu_pred", num_workers=3, factory=gpu_factory, stats=board)
+    _register(arb, "cpu_pred", board=board)  # group "g"... uses "g"
+    # move cpu_pred's contexts onto the cpu group
+    for w in arb.contexts("cpu_pred"):
+        w.device_group = "cpu"
+
+    wg = arb.lease("gpu_pred")               # gpu group now full
+    wg.queue.extend([1, 2, 3])               # high pressure
+    assert arb.lease("gpu_pred") is None     # denied: standing gpu claim
+    wc = arb.lease("cpu_pred")               # floor on cpu
+    # non-floor cpu request: gpu_pred's claim is for a group cpu_pred's
+    # slot could never satisfy — must be granted, not blocked
+    assert wc is not None
+    assert arb.lease("cpu_pred") is not None
+
+
+def test_static_partition_quota_and_no_scale_down():
+    arb = ResourceArbiter(policy=StaticPartition(quota=1))
+    _register(arb, "a")
+    assert not arb.scale_down_enabled
+    assert arb.lease("a") is not None      # floor
+    assert arb.lease("a") is None          # quota of 1: pool never rebalances
+
+
+# --------------------------------------------------------------------------- #
+# SimClock lease handoff                                                      #
+# --------------------------------------------------------------------------- #
+def test_simclock_lease_handoff_transfers_horizon():
+    c = SimClock()
+    c.occupy_shared("w1", "dev", 5.0, 0.0, ready=0.0)
+    c.lease_handoff("w1", "w2")
+    assert c.resource_busy_until("w2") == 5.0
+    assert c.resource_busy_until("w1") == 0.0   # MOVED, not copied
+    # never moves a horizon backwards (w1 already drained to 0 here)
+    c.occupy_shared("w3", "dev", 9.0, 0.0, ready=0.0)
+    c.lease_handoff("w1", "w3")
+    assert c.resource_busy_until("w3") == 9.0
+    assert c.makespan == 9.0                    # survives detached entries
+
+
+def test_handoff_does_not_double_count_on_re_lease():
+    """A handed-off horizon must not linger on the retired worker: when
+    the same context is later re-leased, it starts from the SLOT's
+    inherited horizon — the same virtual work is never scheduled twice."""
+    clk = SimClock()
+    arb = ResourceArbiter(pool=DevicePool({"g": 1}))
+    _register(arb, "a", clock=clk)
+    _register(arb, "b", clock=clk)
+    wa = arb.lease("a")
+    clk.occupy_shared(wa.wid, "g", 10.0, 0.0, ready=0.0)
+    arb.release("a", wa)
+    wb = arb.lease("b")
+    assert clk.resource_busy_until(wb.wid) == 10.0
+    assert clk.resource_busy_until(wa.wid) == 0.0
+    arb.release("b", wb)
+    wa2 = arb.lease("a")                         # same context, re-leased
+    assert wa2.wid == wa.wid
+    assert clk.resource_busy_until(wa2.wid) == 10.0
+    assert clk.makespan == 10.0                  # counted exactly once
+
+
+def test_cross_clock_handoff_via_shared_pool():
+    """Two executors sharing only the DevicePool (separate arbiters and
+    SimClocks): the horizon travels on the Slot itself."""
+    pool = DevicePool({"g": 1})
+    clk1, clk2 = SimClock(), SimClock()
+    arb1 = ResourceArbiter(pool=pool)
+    arb2 = ResourceArbiter(pool=pool)
+    arb1.register("a", num_workers=1, factory=_fake_factory("a"), clock=clk1)
+    arb2.register("b", num_workers=1, factory=_fake_factory("b"), clock=clk2)
+    wa = arb1.lease("a")
+    clk1.occupy_shared(wa.wid, "g", 7.0, 0.0, ready=0.0)
+    arb1.release("a", wa)
+    wb = arb2.lease("b")
+    assert clk2.resource_busy_until(wb.wid) == 7.0
+
+
+def test_constructed_but_never_run_executor_holds_no_slots():
+    """The floor lease is lazy (first submit), so an abandoned executor
+    never strands shared-pool capacity."""
+    pool = DevicePool({"cpu": 1})
+    AQPExecutor([_pred("a")], pool=pool)    # constructed, never run
+    assert pool.in_use("cpu") == 0
+    ex2 = AQPExecutor([_pred("b")], pool=pool)
+    got = sum(b.rows for b in ex2.run(iter(_batches(20))))
+    assert got == 20                        # the slot was still available
+
+
+def test_undersized_pool_rejected_at_construction():
+    """A bounded pool that cannot hold one floor slot per predicate is a
+    guaranteed starvation — rejected before any query runs."""
+    with pytest.raises(ValueError, match="starve"):
+        AQPExecutor([_pred("a"), _pred("b")], pool=DevicePool({"cpu": 1}))
+    # per-group: two predicates pinned to the same 1-slot group
+    with pytest.raises(ValueError, match="starve"):
+        AQPExecutor([_pred("a"), _pred("b")],
+                    pool=DevicePool({"cpu": 1, "tpu:0": 4}),
+                    devices={"a": ("cpu",), "b": ("cpu",)})
+    # an unbounded group absorbs any floor demand
+    AQPExecutor([_pred("a"), _pred("b")], pool=DevicePool())
+
+
+def test_floor_starvation_raises_instead_of_hanging(monkeypatch):
+    """A floor lease denied at RUN time (capacity hoarded elsewhere, e.g.
+    by another executor on the shared pool) must surface an error after
+    the deadline, not spin forever."""
+    from repro.core import laminar
+
+    monkeypatch.setattr(laminar, "FLOOR_STARVATION_DEADLINE_S", 0.3)
+    pool = DevicePool({"cpu": 1})
+    hoarded = pool.try_acquire("cpu")        # a rival holds the only slot
+    assert hoarded is not None
+    ex = AQPExecutor([_pred("a")], pool=pool, warmup=False)
+    with pytest.raises(RuntimeError, match="starved"):
+        ex.collect(iter(_batches(20)))
+
+
+def test_failed_construction_unregisters_partial_registration():
+    """A constructor that fails mid-way (name collision on a shared
+    arbiter) must not poison the names it already registered."""
+    arb = ResourceArbiter()
+    AQPExecutor([_pred("p")], arbiter=arb)   # 'p' now registered
+    with pytest.raises(ValueError, match="already registered"):
+        AQPExecutor([_pred("x"), _pred("p")], arbiter=arb)
+    # 'x' was rolled back: a corrected retry works
+    ex = AQPExecutor([_pred("x")], arbiter=arb)
+    got = sum(b.rows for b in ex.run(iter(_batches(20))))
+    assert got == 20
+
+
+def test_executor_rejects_arbiter_plus_pool_or_policy():
+    with pytest.raises(ValueError, match="pre-built arbiter"):
+        AQPExecutor([_pred("p")], arbiter=ResourceArbiter(),
+                    pool=DevicePool())
+    with pytest.raises(ValueError, match="pre-built arbiter"):
+        AQPExecutor([_pred("p")], arbiter=ResourceArbiter(),
+                    arbiter_policy=StaticPartition())
+
+
+def test_arbiter_handoff_inherits_simclock_horizon():
+    clk = SimClock()
+    arb = ResourceArbiter(pool=DevicePool({"g": 1}))
+    _register(arb, "a", clock=clk)
+    _register(arb, "b", clock=clk)
+    wa = arb.lease("a")
+    clk.occupy_shared(wa.wid, "g", 4.0, 0.0, ready=0.0)
+    arb.release("a", wa)
+    wb = arb.lease("b")
+    # the physical slot's virtual horizon moved with the lease
+    assert clk.resource_busy_until(wb.wid) == 4.0
+
+
+# --------------------------------------------------------------------------- #
+# Scale-down integration: idle workers retire and free their slot             #
+# --------------------------------------------------------------------------- #
+def test_idle_worker_retires_and_slot_is_reclaimed():
+    p = _pred("p", sleep=0.01)
+
+    def source():
+        for b in _batches(300):
+            yield b
+        time.sleep(0.4)        # drain gap: workers idle past the threshold
+        for b in _batches(20):
+            yield b
+
+    ex = AQPExecutor([p], max_workers=4, warmup=False,
+                     drain_threshold=0.05)
+    got = sum(b.rows for b in ex.run(source()))
+    assert got == 320
+    lam = ex.laminars["p"]
+    assert lam.retirements >= 1, "idle worker never retired"
+    snap = ex.stats_snapshot()
+    assert snap["_arbiter"]["releases"] >= 1
+    assert snap["_arbiter"]["leases"] > snap["_arbiter"]["releases"] - 1
+    # shutdown released every slot: no fabricated post-run leases
+    assert ex.leased_worker_counts() == {"p": 0}
+
+
+def test_default_drain_threshold_preserves_short_run_behavior():
+    """With the generous default threshold, short runs never retire —
+    identical to the pre-arbiter private pools."""
+    p = _pred("p", sleep=0.005)
+    ex = AQPExecutor([p], max_workers=4, warmup=False)
+    ex.collect(iter(_batches(100)))
+    assert ex.laminars["p"].retirements == 0
+
+
+# --------------------------------------------------------------------------- #
+# Per-executor launch attribution (concurrent executors, ROADMAP residual)    #
+# --------------------------------------------------------------------------- #
+def test_concurrent_executors_do_not_cross_record_kernel_timings():
+    """Two executors with DIFFERENT kernel-backed predicates run at the
+    same time in one process; each StatsBoard must hold only its own
+    kernel's launch entries (no cross-recorded ``kernel:*``/kernel-name
+    entries from the other executor)."""
+    from repro import udfs
+
+    SIZE, SEQ, N = 8, 16, 12
+    rng = np.random.default_rng(0)
+    crops = rng.uniform(0, 255, (N, SIZE, SIZE, 3)).astype(np.float32)
+    tokens = rng.integers(1, 256, (N, 12)).astype(np.int32)
+
+    ex_hsv = AQPExecutor([udfs.color_predicate("black", size=SIZE)],
+                         max_workers=2, warmup=False)
+    ex_moe = AQPExecutor([udfs.topic_router_predicate(0, n_experts=4, seq=SEQ)],
+                         max_workers=2, warmup=False)
+
+    def batches(col, arr):
+        return [make_batch({col: arr[i:i + 4]}, np.arange(i, i + 4))
+                for i in range(0, N, 4)]
+
+    errors = []
+
+    def consume(ex, src):
+        try:
+            list(ex.run(iter(src)))
+        except BaseException as e:  # surfaced via the errors list
+            errors.append(e)
+
+    t1 = threading.Thread(target=consume,
+                          args=(ex_hsv, batches("crop", crops)))
+    t2 = threading.Thread(target=consume,
+                          args=(ex_moe, batches("tokens", tokens)))
+    t1.start(); t2.start()
+    t1.join(timeout=120); t2.join(timeout=120)
+    assert not errors, errors
+    assert not t1.is_alive() and not t2.is_alive()
+
+    snap_hsv = ex_hsv.stats_snapshot()
+    snap_moe = ex_moe.stats_snapshot()
+    # each board saw its OWN kernel...
+    assert any("hsv_color" in k for k in snap_hsv)
+    assert any("moe_router" in k for k in snap_moe)
+    # ...and nothing from the other executor's launches
+    assert not any("moe_router" in k for k in snap_hsv), snap_hsv.keys()
+    assert not any("hsv_color" in k for k in snap_moe), snap_moe.keys()
+
+
+def test_token_hooks_are_thread_affine(rng):
+    import jax.numpy as jnp
+
+    from repro.kernels import launch, ops
+
+    events_tok, events_glob = [], []
+    tok = object()
+    h_tok = launch.add_launch_hook(events_tok.append, token=tok)
+    h_glob = launch.add_launch_hook(events_glob.append)
+    try:
+        logits = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+        ops.moe_topk_router(logits, 2, impl="pallas")   # untagged thread
+        assert events_tok == []
+        assert len(events_glob) == 1
+        with launch.launch_context(tok):                # tagged
+            ops.moe_topk_router(logits, 2, impl="pallas")
+        assert len(events_tok) == 1
+        assert len(events_glob) == 2
+        assert launch.current_launch_context() is None  # context restored
+    finally:
+        launch.remove_launch_hook(h_tok)
+        launch.remove_launch_hook(h_glob)
+    assert tok not in launch._TOKEN_HOOKS               # registry cleaned up

@@ -112,6 +112,21 @@ def test_uc2_cache_across_queries(video):
     assert stats["color"]["cache_hit_rate"] >= 0.95  # same order -> same rows
 
 
+def test_batches_tolerate_mixed_row_id_sources():
+    """A source mixing chunks with and without _row_id must still flow:
+    real ids pass through, missing ones synthesize position-in-batch."""
+    src = [
+        {"x": np.arange(4.0), "_row_id": np.arange(100, 104)},
+        {"x": np.arange(4.0, 7.0)},  # no _row_id column
+    ]
+    udf = UDF("u", fn=lambda d: d["x"], columns=("x",))
+    p = Predicate("p", udf, compare=lambda o: o >= 0)
+    q = Query(source=iter(src), predicates=[p], batch_rows=5)
+    plan = optimize(q, executor_kwargs=dict(max_workers=1))
+    rows = plan.collect_rows()
+    assert sorted(rows["x"].tolist()) == list(np.arange(7.0))
+
+
 def test_trivial_pushdown():
     src = [{"x": np.arange(10.0), "rating": np.arange(10),
             "_row_id": np.arange(10)}]
