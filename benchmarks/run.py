@@ -20,6 +20,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from benchmarks import (  # noqa: E402
     bench_content_routing,
     bench_kernels,
+    bench_routing_throughput,
     bench_uc1_routing,
     bench_uc1_synthetic,
     bench_uc2_reuse,
@@ -36,6 +37,7 @@ SUITES = {
     "uc4": bench_uc4_databalance.main,      # Fig 14
     "content": bench_content_routing.main,  # beyond-paper (§2.2 lineage)
     "kernels": bench_kernels.main,          # kernel hot spots
+    "routing": bench_routing_throughput.main,  # sharded eddy core scaling
 }
 
 

@@ -10,13 +10,21 @@ Public surface:
             HydroPolicy; RoundRobin / DataAware / DeviceAlternating;
             PressureRanked / StaticPartition (arbiter)
   DevicePool / ResourceArbiter       — §5.2 elastic cross-predicate leasing
-  LaminarRouter (GACU) / EddyRouter / AQPExecutor — §3.2, §4, §5
+  LaminarRouter (GACU) / EddyShardSet / AQPExecutor — §3.2, §4, §5
+    (the eddy core runs as N routing shards with work-stealing and merged
+    statistics; single-shard is the deterministic default — see core/eddy.py)
   Query / optimize / PhysicalPlan    — §3.1 rule-based plan -> AQP plan
   SimClock / WallClock               — deterministic scheduling evaluation
   vectorized (two_stage_filter / cascade_filter) — TPU-native short-circuit
 """
 from repro.core.batch import RoutingBatch, make_batch  # noqa: F401
 from repro.core.cache import ReuseCache  # noqa: F401
+from repro.core.eddy import (  # noqa: F401
+    SHARD_AUTO_MAX,
+    SHARD_AUTO_THRESHOLD_BPS,
+    EddyShardSet,
+    InFlightTracker,
+)
 from repro.core.executor import AQPExecutor  # noqa: F401
 from repro.core.laminar import GACU_MAX_WORKERS, LaminarRouter  # noqa: F401
 from repro.core.plan import PhysicalPlan, Query, TrivialPredicate, optimize  # noqa: F401

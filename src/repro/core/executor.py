@@ -1,6 +1,18 @@
-"""AQPExecutor — wires EddyPull + EddyRouter + Laminar routers + workers
+"""AQPExecutor — wires EddyPull + EddyShardSet + Laminar routers + workers
 into the executor of Fig. 2 and exposes the parent-executor pull interface
 (a blocking iterator over the output queue).
+
+Sharded routing core: the eddy loop runs as N shards over a lock-sharded
+central queue with consumer-side work-stealing and merged statistics (see
+core/eddy.py). Knobs:
+
+  ``shards=None`` (default) — ONE shard, auto-scaling to ``SHARD_AUTO_MAX``
+      once observed routing throughput crosses ``shard_auto_threshold``
+      batches/s (the regime where routing, not UDF eval, is the ceiling).
+      Under SimClock auto-scaling is disabled: the deterministic paths
+      always run single-shard, bit-for-bit as before.
+  ``shards=k`` — exactly k shards from the start (wall or sim clock).
+  ``shard_auto_threshold`` — batches/s above which auto mode grows.
 
 Resource arbitration (§5.2): the executor creates a ResourceArbiter (or
 accepts a shared one) that owns every predicate's worker contexts and
@@ -28,12 +40,15 @@ from typing import Dict, Iterable, Iterator, List, Optional, Sequence
 
 from repro.core.batch import RoutingBatch
 from repro.core.cache import ReuseCache
-from repro.core.eddy import EddyPull, EddyRouter
+from repro.core.eddy import (
+    SHARD_AUTO_MAX, SHARD_AUTO_THRESHOLD_BPS, EddyPull, EddyShardSet,
+    InFlightTracker,
+)
 from repro.core.laminar import GACU_MAX_WORKERS, LaminarRouter
 from repro.core.policies import (
     ArbiterPolicy, EddyPolicy, HydroPolicy, LaminarPolicy, RoundRobin,
 )
-from repro.core.queues import BoundedQueue, CentralQueue, ClosedError
+from repro.core.queues import CentralQueue, ClosedError
 from repro.core.resources import DRAIN_THRESHOLD_S, DevicePool, ResourceArbiter
 from repro.core.simclock import WallClock
 from repro.core.stats import StatsBoard
@@ -62,14 +77,34 @@ class AQPExecutor:
         pool: Optional[DevicePool] = None,
         arbiter_policy: Optional[ArbiterPolicy] = None,
         drain_threshold: Optional[float] = DRAIN_THRESHOLD_S,
+        shards: Optional[int] = None,
+        shard_auto_threshold: float = SHARD_AUTO_THRESHOLD_BPS,
     ):
         self.predicates = predicates
         self.policy = policy or HydroPolicy()
         self.clock = clock or WallClock()
         self.cache = cache
-        self.stats = StatsBoard([p.name for p in predicates], cost_alpha=cost_alpha)
-        self.central = CentralQueue(central_capacity, lam)
-        self.output = BoundedQueue(output_capacity)
+        # Shard-count resolution: explicit ``shards=k`` wins; the default
+        # is one shard that AUTO-scales to SHARD_AUTO_MAX above the
+        # throughput threshold — except under SimClock, where the
+        # deterministic timelines require the single-shard loop.
+        if shards is not None and shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        deterministic = getattr(self.clock, "simulated", False)
+        self._shard_auto = shards is None and not deterministic
+        self._initial_shards = 1 if shards is None else shards
+        self._max_shards = (
+            SHARD_AUTO_MAX if self._shard_auto else self._initial_shards
+        )
+        self._shard_auto_threshold = shard_auto_threshold
+        self.stats = StatsBoard(
+            [p.name for p in predicates], cost_alpha=cost_alpha,
+            shards=self._max_shards,
+        )
+        self.central = CentralQueue(central_capacity, lam,
+                                    shards=self._max_shards)
+        self.output = CentralQueue(output_capacity, lam=1.0,
+                                   shards=self._max_shards)
         self._error_lock = threading.Lock()
         self._worker_error = None
         # per-executor launch attribution token: every thread this executor
@@ -117,7 +152,7 @@ class AQPExecutor:
             raise
         self.warmup = warmup
         self._pull: Optional[EddyPull] = None
-        self._router: Optional[EddyRouter] = None
+        self._router: Optional[EddyShardSet] = None
         self._kernel_hook = None  # launch-timing hook, live only during run()
 
     # ------------------------------------------------------------------ #
@@ -163,13 +198,19 @@ class AQPExecutor:
             self._kernel_hook = kernel_launch.connect_stats_board(
                 self.stats, token=self._launch_token
             )
+        tracker = InFlightTracker()
         self._pull = EddyPull(source, self.central,
-                              launch_token=self._launch_token)
-        self._router = EddyRouter(
+                              launch_token=self._launch_token,
+                              tracker=tracker)
+        self._router = EddyShardSet(
             self.predicates, self.central, self.output, self.laminars,
             self.stats, self.policy, self._pull,
             cache=self.cache, warmup=self.warmup,
             launch_token=self._launch_token,
+            shards=self._initial_shards,
+            max_shards=self._max_shards,
+            auto_threshold=self._shard_auto_threshold,
+            tracker=tracker,
         )
         self._pull.start()
         self._router.start()
@@ -207,14 +248,29 @@ class AQPExecutor:
 
     # ------------------------------ metrics ---------------------------- #
     def stats_snapshot(self):
-        """Predicate statistics plus arbiter reallocation counters.
+        """Predicate statistics plus arbiter and routing-core counters.
 
         Predicate entries are keyed by name as before; the reserved
         ``"_arbiter"`` key carries lease/release/denial/handoff counters
-        (consumers iterating predicate entries should skip ``_``-keys)."""
+        and ``"_routing"`` the shard-set picture (active shards, steals,
+        circulations, completed). Consumers iterating predicate entries
+        should skip ``_``-keys."""
         snap = self.stats.snapshot()
         snap["_arbiter"] = self.arbiter.counters()
+        r = self._router
+        snap["_routing"] = {
+            "shards_active": r.shards_active if r is not None else 0,
+            "steals": r.steals if r is not None else 0,
+            "circulations": r.circulations if r is not None else 0,
+            "completed": r.completed if r is not None else 0,
+        }
         return snap
+
+    @property
+    def shards_active(self) -> int:
+        """Routing shards currently running (grows past 1 only when
+        auto-scaling trips or ``shards=`` was explicit)."""
+        return self._router.shards_active if self._router is not None else 0
 
     def active_worker_counts(self) -> Dict[str, int]:
         return {

@@ -192,7 +192,13 @@ class LaminarRouter:
             return w
 
     def submit(self, batch: RoutingBatch) -> None:
-        """Route a batch to a worker (blocking; scales up under saturation)."""
+        """Route a batch to a worker (blocking; scales up under saturation).
+
+        Thread-safe for the N-shard eddy core: the router lock is held only
+        for the choose/pin bookkeeping; the blocking queue put, worker
+        activation, and proxy-load reduction all run outside it, and the
+        blocking waits land on per-worker condition variables — concurrent
+        shard submits to different workers never serialize on one CV."""
         # data-aware proxy load (§5.3), computed OUTSIDE the router lock:
         # it reduces over the batch's columns and must not serialize
         # against worker retirement callbacks
@@ -204,9 +210,11 @@ class LaminarRouter:
             self._ensure_floor()
             grown = self._maybe_scale_up(batch)
             if grown is not None:
-                # lock-free: activation may warm-compile (GACU ensure_ready)
-                # and must not serialize against retirement callbacks; only
-                # the eddy thread calls submit, so this cannot race itself
+                # outside the router lock: activation may warm-compile
+                # (GACU ensure_ready) and must not serialize against
+                # retirement callbacks. N routing shards may submit
+                # concurrently; WorkerContext.activate is internally
+                # locked, so racing activations start exactly one thread
                 grown.activate()
             with self._lock:
                 workers = list(self._active)

@@ -1,8 +1,12 @@
 """Routing policies (§4.1, §4.3, §5.3).
 
-EDDY policies rank the unvisited predicates for a batch; the router sends
-the batch to the first. All estimates come from run-time stats (StatsBoard)
-— never a-priori.
+EDDY policies rank the unvisited predicates for a batch; the routing shard
+sends the batch to the first. All estimates come from run-time stats
+(StatsBoard) — never a-priori. On a sharded board (N-shard eddy core),
+``stats[name]`` yields a MERGED view folding every shard's write stripe,
+so each shard ranks on global statistics while recording stays
+uncontended; policies are stateless sorts (or keep only GIL-atomic
+counters), so one policy instance is safely shared by all shards.
 
   * CostDriven       — Hydro's contribution: rank by measured cost/row.
                        Optimal when predicates run CONCURRENTLY (different
@@ -133,7 +137,9 @@ class ContentBased(EddyPolicy):
 
     def rank(self, batch, preds, stats, cache):
         if stats.bucket_fn is None:
-            stats.bucket_fn = self.bucket_fn  # wire the eval-side recording
+            # wire the eval-side recording; benign if shards race here
+            # (every shard writes the same function)
+            stats.bucket_fn = self.bucket_fn
         b = stats.bucket_of(batch)
         return sorted(preds, key=lambda p: (
             stats[p.name].score(bucket=b, resolution=SEL_RESOLUTION),

@@ -4,6 +4,16 @@ Per predicate: EMA cost per row, lottery-based selectivity (tickets =
 rows routed, wins = rows dropped — the Eddy paper's estimator), cache hit
 rate, queue length, and per-worker outstanding-work accounting for the
 data-aware Laminar policy.
+
+LOCK-SHARDED (``shards > 1``): each predicate's entry becomes a
+``ShardedPredicateStats`` — one ``PredicateStats`` stripe per routing
+shard. Writers (worker threads recording eval timings, kernel launch
+hooks) record into a THREAD-AFFINE stripe, so concurrent recorders on
+different threads never contend on one lock; readers (the shards' routing
+policies) fold the stripes into a merged estimate (tickets/wins summed,
+cost = batch-weighted mean of the stripe EMAs). ``shards=1`` (the default,
+and always the case under SimClock) keeps the original single-entry
+behavior bit-for-bit.
 """
 from __future__ import annotations
 
@@ -129,18 +139,121 @@ class PredicateStats:
         }
 
 
+class ShardedPredicateStats:
+    """Lock-sharded predicate statistics: one ``PredicateStats`` stripe per
+    routing shard, merged on read.
+
+    Writes go to a THREAD-AFFINE stripe (``thread id % shards``): each
+    recording thread owns one stripe's lock, so N workers + N shards never
+    serialize on a single per-predicate lock. Reads fold across stripes —
+    counter sums for the lottery estimator, a batch-weighted mean of the
+    stripe EMAs for cost — without any global lock (counter reads are
+    GIL-atomic; a fold may see a stripe mid-update, which perturbs the
+    estimate by at most one batch, well under estimator noise)."""
+
+    def __init__(self, name: str, stripes):
+        self.name = name
+        self.stripes = list(stripes)
+
+    def _stripe(self) -> PredicateStats:
+        return self.stripes[threading.get_ident() % len(self.stripes)]
+
+    def stripe(self, i: int) -> PredicateStats:
+        """Direct stripe access (tests / per-shard observability)."""
+        return self.stripes[i % len(self.stripes)]
+
+    # ------------------------- recording ------------------------- #
+    def record_eval(self, rows_in: int, rows_out: int, seconds: float,
+                    bucket: Optional[int] = None) -> None:
+        self._stripe().record_eval(rows_in, rows_out, seconds, bucket=bucket)
+
+    def record_cache(self, probes: int, hits: int) -> None:
+        self._stripe().record_cache(probes, hits)
+
+    # ------------------------- merged estimates ------------------------- #
+    @property
+    def measured(self) -> bool:
+        return any(s.measured for s in self.stripes)
+
+    @property
+    def batches(self) -> int:
+        return sum(s.batches for s in self.stripes)
+
+    @property
+    def tickets(self) -> int:
+        return sum(s.tickets for s in self.stripes)
+
+    @property
+    def wins(self) -> int:
+        return sum(s.wins for s in self.stripes)
+
+    def cost(self, default: float = 1e-3) -> float:
+        num = den = 0.0
+        for s in self.stripes:
+            v = s.cost_per_row.value
+            if v is not None:
+                w = max(s.batches, 1)
+                num += v * w
+                den += w
+        return num / den if den else default
+
+    def selectivity(self, default: float = 0.5,
+                    bucket: Optional[int] = None,
+                    min_bucket_tickets: int = 20) -> float:
+        if bucket is not None:
+            bt = sum(s.bucket_tickets.get(bucket, 0) for s in self.stripes)
+            if bt >= min_bucket_tickets:
+                bw = sum(s.bucket_wins.get(bucket, 0) for s in self.stripes)
+                return 1.0 - bw / bt
+        tickets = self.tickets
+        if tickets == 0:
+            return default
+        return 1.0 - self.wins / tickets
+
+    def pressure(self, queue_depth: int) -> float:
+        return self.cost() * max(0, queue_depth)
+
+    def cache_hit_rate(self) -> float:
+        probes = sum(s.cache_probes for s in self.stripes)
+        if probes == 0:
+            return 0.0
+        return sum(s.cache_hits for s in self.stripes) / probes
+
+    def score(self, bucket: Optional[int] = None,
+              resolution: Optional[float] = None) -> float:
+        sel = self.selectivity(bucket=bucket)
+        if resolution:
+            sel = round(sel / resolution) * resolution
+        return self.cost() / max(1.0 - sel, 1e-6)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "cost_per_row": self.cost(),
+            "selectivity": self.selectivity(),
+            "score": self.score(),
+            "cache_hit_rate": self.cache_hit_rate(),
+            "batches": self.batches,
+        }
+
+
 class StatsBoard:
     """All predicate stats + per-worker load accounting (one per executor).
 
     ``cost_alpha`` sets the cost-estimator EMA horizon: small values model
     long-window averaging (the paper's Fig 9a estimator that "cannot
-    promptly adjust" across cache-boundary segments)."""
+    promptly adjust" across cache-boundary segments).
 
-    def __init__(self, predicate_names, *, cost_alpha: float = 0.3):
+    ``shards`` lock-shards every entry (see ``ShardedPredicateStats``) for
+    the N-shard routing core; the worker-load ledger's lock is striped by
+    worker id so concurrent ``LaminarRouter.submit`` calls from different
+    shards don't serialize on one lock either."""
+
+    def __init__(self, predicate_names, *, cost_alpha: float = 0.3,
+                 shards: int = 1):
         self.cost_alpha = cost_alpha
+        self.shards = max(1, shards)
         self.preds: Dict[str, PredicateStats] = {
-            n: PredicateStats(n, cost_per_row=Ema(cost_alpha))
-            for n in predicate_names
+            n: self._new_entry(n) for n in predicate_names
         }
         # Routing predicates declared at construction. Auxiliary entries
         # (per-kernel launch costs, fed by ``launch.connect_stats_board``)
@@ -150,6 +263,18 @@ class StatsBoard:
         self.proxy_rate = Ema(0.3)  # seconds per proxy unit (data-aware ETA)
         self.bucket_fn = None       # content-based routing: batch -> bucket id
         self._lock = threading.Lock()
+        self._load_locks = [threading.Lock() for _ in range(self.shards)]
+
+    def _new_entry(self, name: str):
+        if self.shards == 1:
+            return PredicateStats(name, cost_per_row=Ema(self.cost_alpha))
+        return ShardedPredicateStats(name, [
+            PredicateStats(name, cost_per_row=Ema(self.cost_alpha))
+            for _ in range(self.shards)
+        ])
+
+    def _load_lock(self, worker: str) -> threading.Lock:
+        return self._load_locks[hash(worker) % len(self._load_locks)]
 
     def bucket_of(self, batch) -> Optional[int]:
         if self.bucket_fn is None:
@@ -167,18 +292,25 @@ class StatsBoard:
     def __getitem__(self, name: str) -> PredicateStats:
         return self.preds[name]
 
-    def ensure(self, name: str) -> PredicateStats:
+    def ensure(self, name: str, shard: Optional[int] = None):
         """Get-or-create an entry, safely from any worker thread.
 
         Kernel launch hooks report under the kernel's own name, which is
         unknown until the first launch; entries appear mid-run while the
-        eddy thread reads the board, so creation must hold the lock."""
+        eddy shards read the board, so creation must hold the lock.
+
+        Shard-aware: with ``shard`` given on a sharded board, returns that
+        shard's write stripe directly (an uncontended recording target);
+        otherwise returns the merged entry (whose recorders pick a
+        thread-affine stripe themselves)."""
         with self._lock:
             st = self.preds.get(name)
             if st is None:
-                st = PredicateStats(name, cost_per_row=Ema(self.cost_alpha))
+                st = self._new_entry(name)
                 self.preds[name] = st
-            return st
+        if shard is not None and isinstance(st, ShardedPredicateStats):
+            return st.stripe(shard)
+        return st
 
     def ensure_kernel(self, name: str) -> PredicateStats:
         """Entry for a kernel-launch timing stream.
@@ -203,21 +335,32 @@ class StatsBoard:
             return all(self.preds[n].measured for n in self._declared)
 
     # ---------------- data-aware load accounting ---------------- #
+    # The ledger lock is striped by worker id: submits racing from
+    # different shards only contend when they touch the same worker.
     def add_load(self, worker: str, units: float) -> None:
-        with self._lock:
+        with self._load_lock(worker):
             self.worker_load[worker] = self.worker_load.get(worker, 0.0) + units
 
     def finish_load(self, worker: str, units: float) -> None:
-        with self._lock:
+        with self._load_lock(worker):
             self.worker_load[worker] = max(
                 0.0, self.worker_load.get(worker, 0.0) - units
             )
 
     def load_of(self, worker: str) -> float:
-        with self._lock:
+        with self._load_lock(worker):
             return self.worker_load.get(worker, 0.0)
 
-    def snapshot(self) -> Dict[str, Dict[str, float]]:
+    def snapshot(self, shard: Optional[int] = None) -> Dict[str, Dict[str, float]]:
+        """Per-predicate snapshots — merged by default; ``shard=i`` returns
+        shard ``i``'s un-merged stripe view on a sharded board (per-shard
+        observability; identical to the merged view when ``shards == 1``)."""
         with self._lock:  # copy first: entries may be created concurrently
             items = list(self.preds.items())
+        if shard is not None:
+            return {
+                n: (p.stripe(shard) if isinstance(p, ShardedPredicateStats)
+                    else p).snapshot()
+                for n, p in items
+            }
         return {n: p.snapshot() for n, p in items}

@@ -147,20 +147,27 @@ class WorkerContext:
     # submits in flight (set under the router lock): a pinned worker must
     # not retire, or the in-flight batch would land in a dead queue
     pinned: int = 0
+    # guards the activated check-and-set: with N routing shards, two
+    # shards can choose the same worker concurrently and both reach
+    # activate() — without the lock they would race the flag and start
+    # two threads for one context
+    _activate_lock: threading.Lock = field(default_factory=threading.Lock)
 
     def activate(self) -> None:
         """Called by the Laminar router when the first batch is routed here.
 
         Re-entrant across retirement: a context whose lease was retired
         (thread exited, ``activated`` reset by the router) starts a fresh
-        thread on the next routed batch."""
-        if self.activated:
-            return
-        self.activated = True
-        self.pred.udf.ensure_ready()  # lazy context allocation (GACU)
-        self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name=f"worker-{self.wid}")
-        self._thread.start()
+        thread on the next routed batch. Safe to race from multiple
+        routing shards: exactly one caller starts the thread."""
+        with self._activate_lock:
+            if self.activated:
+                return
+            self.activated = True
+            self.pred.udf.ensure_ready()  # lazy context allocation (GACU)
+            self._thread = threading.Thread(target=self._run, daemon=True,
+                                            name=f"worker-{self.wid}")
+            self._thread.start()
 
     def submit(self, batch: RoutingBatch, timeout: Optional[float] = None) -> bool:
         self.activate()

@@ -1,6 +1,7 @@
 import os
 import sys
 import threading
+import time
 
 # tests see the REAL device count (1 CPU device) — the 512-device flag is
 # set ONLY inside launch/dryrun.py (and subprocess tests that exec it).
@@ -20,9 +21,25 @@ def rng():
 # machinery) must not leave live NON-DAEMON threads behind — a forgotten
 # join would hang interpreter exit. The session FAILS if the live
 # non-daemon thread count grew between session start and finish.
+#
+# Routing-core threads (eddy-shard-*/eddy-pull) are daemons, so the
+# non-daemon count misses them: a shard that never saw the termination
+# barrier would linger silently. They get their own check — every shard
+# set must have wound down by session end (with a short grace period:
+# shards notice queue close/quiescence within SHARD_GET_TIMEOUT_S).
 # --------------------------------------------------------------------------- #
+_GUARDED_DAEMON_PREFIXES = ("eddy-shard-", "eddy-pull")
+
+
 def _live_nondaemon_threads():
     return [t for t in threading.enumerate() if t.is_alive() and not t.daemon]
+
+
+def _live_routing_threads():
+    return [
+        t for t in threading.enumerate()
+        if t.is_alive() and t.name.startswith(_GUARDED_DAEMON_PREFIXES)
+    ]
 
 
 def pytest_sessionstart(session):
@@ -41,5 +58,21 @@ def pytest_sessionfinish(session, exitstatus):
             f"from {baseline} to {len(leaked)} across the test session: "
             f"{names}\n(a retired worker lease or thread pool was not "
             "joined/shut down)\n"
+        )
+        session.exitstatus = 3
+    routing = _live_routing_threads()
+    if routing:
+        # grace: shards poll for global quiescence at SHARD_GET_TIMEOUT_S
+        deadline = time.monotonic() + 2.0
+        while routing and time.monotonic() < deadline:
+            time.sleep(0.05)
+            routing = _live_routing_threads()
+    if routing:
+        names = sorted(t.name for t in routing)
+        sys.stderr.write(
+            "\nLEAKED-THREAD GUARD: routing shard/pull threads still "
+            f"alive at session end: {names}\n(a shard set missed its "
+            "termination barrier — pull done + in-flight zero — or an "
+            "executor was never shut down)\n"
         )
         session.exitstatus = 3

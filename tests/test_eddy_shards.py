@@ -1,0 +1,180 @@
+"""Sharded eddy routing core: correctness under N shards, work-stealing,
+termination barrier, auto-scaling, and the pinned circulation order."""
+import collections
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    SHARD_AUTO_MAX,
+    AQPExecutor,
+    CostDriven,
+    InFlightTracker,
+    Predicate,
+    SimClock,
+    UDF,
+    make_batch,
+)
+from repro.core.queues import CentralQueue
+
+
+def _pred(name, fn=None, sleep_s=0.0, resource="cpu"):
+    def _fn(d, _fn=fn, _s=sleep_s):
+        if _s:
+            time.sleep(_s)
+        return (_fn or (lambda cols: cols["x"] >= 0))(d)
+
+    udf = UDF(name + "_udf", fn=_fn, columns=("x",), resource=resource,
+              bucket=False)
+    return Predicate(name, udf, compare=lambda out: out.astype(bool))
+
+
+def _batches(n, per=8):
+    return [
+        make_batch({"x": np.arange(i * per, (i + 1) * per, dtype=np.float64)},
+                   np.arange(i * per, (i + 1) * per))
+        for i in range(n)
+    ]
+
+
+def _row_multiset(out):
+    c = collections.Counter()
+    for b in out:
+        c.update(int(i) for i in b.row_ids)
+    return c
+
+
+# --------------------------------------------------------------------------- #
+# InFlightTracker
+# --------------------------------------------------------------------------- #
+def test_in_flight_tracker_counts():
+    t = InFlightTracker()
+    assert t.value() == 0
+    t.started(); t.started()
+    assert t.value() == 2
+    t.finished()
+    assert t.value() == 1
+    t.finished()
+    assert t.value() == 0
+
+
+# --------------------------------------------------------------------------- #
+# Sharded runs: same results, stealing active, clean termination
+# --------------------------------------------------------------------------- #
+def _row_multiset_of_source(n, per=8):
+    c = collections.Counter()
+    for i in range(n * per):
+        c[i] += 1
+    return c
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_sharded_run_matches_single_shard_rowid_multiset(shards):
+    def build(k):
+        preds = [_pred(f"p{i}", sleep_s=0.002) for i in range(4)]
+        return AQPExecutor(preds, policy=CostDriven(), max_workers=1,
+                           warmup=False, shards=k)
+
+    base = _row_multiset(build(1).collect(_batches(40)))
+    ex = build(shards)
+    got = _row_multiset(ex.collect(_batches(40)))
+    assert got == base  # nothing lost, nothing duplicated
+    assert got == _row_multiset_of_source(40)
+    assert ex.shards_active == shards
+
+
+def test_sharded_run_steals_from_siblings():
+    preds = [_pred(f"p{i}", sleep_s=0.003) for i in range(4)]
+    ex = AQPExecutor(preds, policy=CostDriven(), max_workers=1,
+                     warmup=False, shards=4)
+    out = ex.collect(_batches(60))
+    assert _row_multiset(out) == _row_multiset_of_source(60)
+    # uneven drain across 4 stripes over 60 batches: stealing must fire
+    assert ex.stats_snapshot()["_routing"]["steals"] > 0
+
+
+def test_sharded_warmup_measures_all_predicates():
+    preds = [_pred(f"p{i}", sleep_s=0.002) for i in range(3)]
+    ex = AQPExecutor(preds, policy=CostDriven(), max_workers=1, shards=2)
+    out = ex.collect(_batches(30))
+    snap = ex.stats_snapshot()
+    assert all(snap[f"p{i}"]["batches"] > 0 for i in range(3))
+    assert _row_multiset(out) == _row_multiset_of_source(30)
+
+
+def test_sharded_empty_source_terminates():
+    preds = [_pred("a"), _pred("b")]
+    ex = AQPExecutor(preds, warmup=False, shards=4)
+    t0 = time.monotonic()
+    assert ex.collect(iter([])) == []
+    assert time.monotonic() - t0 < 5.0  # termination barrier, no hang
+
+
+def test_sharded_worker_exception_propagates():
+    def boom(d):
+        raise ValueError("kaboom")
+
+    ex = AQPExecutor([_pred("a", fn=boom)], max_workers=1, warmup=False,
+                     shards=2)
+    with pytest.raises(RuntimeError, match="predicate worker failed"):
+        ex.collect(_batches(6))
+
+
+# --------------------------------------------------------------------------- #
+# Shard-count resolution: explicit, auto, SimClock-deterministic
+# --------------------------------------------------------------------------- #
+def test_simclock_defaults_to_single_shard():
+    clk = SimClock()
+    ex = AQPExecutor([_pred("a"), _pred("b")], clock=clk)
+    assert ex._max_shards == 1  # deterministic path never auto-scales
+    ex.collect(_batches(10))
+    assert ex.shards_active == 1
+
+
+def test_explicit_shards_rejects_zero():
+    with pytest.raises(ValueError):
+        AQPExecutor([_pred("a")], shards=0)
+
+
+def test_auto_scale_trips_above_threshold():
+    # cheap predicates, threshold ~0: the one-shot growth must trip after
+    # SHARD_AUTO_MIN_COMPLETED completions and start the remaining shards
+    preds = [_pred(f"p{i}") for i in range(2)]
+    ex = AQPExecutor(preds, policy=CostDriven(), max_workers=1, warmup=False,
+                     shards=None, shard_auto_threshold=0.001)
+    out = ex.collect(_batches(100))
+    assert _row_multiset(out) == _row_multiset_of_source(100)
+    assert ex.shards_active == SHARD_AUTO_MAX
+    assert ex._router.grew_at is not None
+    assert ex._router.grew_at >= 64  # SHARD_AUTO_MIN_COMPLETED
+
+
+def test_auto_scale_stays_single_below_threshold():
+    preds = [_pred(f"p{i}") for i in range(2)]
+    ex = AQPExecutor(preds, policy=CostDriven(), max_workers=1, warmup=False,
+                     shards=None, shard_auto_threshold=1e12)
+    out = ex.collect(_batches(80))
+    assert _row_multiset(out) == _row_multiset_of_source(80)
+    assert ex.shards_active == 1
+    assert ex._router.grew_at is None
+
+
+# --------------------------------------------------------------------------- #
+# Circulation order regression: head-pop -> TAIL reinsert, no put_front
+# --------------------------------------------------------------------------- #
+def test_put_front_is_gone():
+    # the dead head-insert path was removed: the warmup circular flow
+    # reinserts at the tail via put_worker (see below)
+    assert not hasattr(CentralQueue, "put_front")
+
+
+def test_circular_flow_reinserts_at_tail():
+    q = CentralQueue(capacity=8, lam=0.5)
+    q.put_pull("b1")
+    q.put_pull("b2")
+    head = q.get(timeout=0.1)
+    assert head == "b1"
+    q.put_worker(head)  # circulate: delayed batch goes to the TAIL
+    assert q.get(timeout=0.1) == "b2"  # younger batch now ahead of it
+    assert q.get(timeout=0.1) == "b1"

@@ -1,0 +1,124 @@
+"""Lock-sharded StatsBoard: thread-affine write stripes, merged read folds."""
+import threading
+
+import pytest
+
+from repro.core.stats import PredicateStats, ShardedPredicateStats, StatsBoard
+
+
+def test_single_shard_board_keeps_raw_entries():
+    # shards=1 (the default, and always the case under SimClock) must keep
+    # the original PredicateStats entries bit-for-bit — deterministic
+    # benchmarks and tests seed their fields directly
+    b = StatsBoard(["a"], shards=1)
+    assert isinstance(b["a"], PredicateStats)
+    assert not isinstance(b["a"], ShardedPredicateStats)
+
+
+def test_sharded_board_entries_and_stripe_access():
+    b = StatsBoard(["a"], shards=3)
+    assert isinstance(b["a"], ShardedPredicateStats)
+    assert len(b["a"].stripes) == 3
+    # ensure(name, shard=i) hands back that shard's raw write stripe
+    assert b.ensure("a", shard=1) is b["a"].stripe(1)
+
+
+def test_merged_counters_sum_across_stripes():
+    b = StatsBoard(["a"], shards=2)
+    b["a"].stripe(0).record_eval(10, 4, 0.01)
+    b["a"].stripe(1).record_eval(30, 15, 0.03)
+    m = b["a"]
+    assert m.batches == 2
+    assert m.tickets == 40
+    assert m.wins == (10 - 4) + (30 - 15)
+    # lottery selectivity folds tickets/wins globally: 1 - 21/40
+    assert m.selectivity() == pytest.approx(1.0 - 21 / 40)
+    assert m.measured
+
+
+def test_merged_cost_is_batch_weighted_fold():
+    b = StatsBoard(["a"], shards=2, cost_alpha=1.0)  # EMA == last sample
+    s0, s1 = b["a"].stripe(0), b["a"].stripe(1)
+    s0.record_eval(10, 10, 0.10)   # 0.010 s/row, 1 batch
+    s1.record_eval(10, 10, 0.40)   # 0.040 s/row
+    s1.record_eval(10, 10, 0.40)   # ... over 2 batches
+    want = (0.010 * 1 + 0.040 * 2) / 3
+    assert b["a"].cost() == pytest.approx(want)
+
+
+def test_merged_cost_ignores_unmeasured_stripes():
+    b = StatsBoard(["a"], shards=4, cost_alpha=1.0)
+    b["a"].stripe(2).record_eval(10, 10, 0.20)
+    assert b["a"].cost() == pytest.approx(0.020)  # not dragged toward 0
+    assert StatsBoard(["z"], shards=4)["z"].cost(default=7.0) == 7.0
+
+
+def test_merged_bucket_selectivity_folds_stripes():
+    b = StatsBoard(["a"], shards=2)
+    # bucket 5: 30 tickets / 12 wins split across the two stripes
+    b["a"].stripe(0).record_eval(10, 6, 0.01, bucket=5)
+    b["a"].stripe(1).record_eval(20, 12, 0.01, bucket=5)
+    sel = b["a"].selectivity(bucket=5, min_bucket_tickets=20)
+    assert sel == pytest.approx(1.0 - 12 / 30)
+    # below the ticket floor the global fold is used instead
+    sel_floor = b["a"].selectivity(bucket=5, min_bucket_tickets=100)
+    assert sel_floor == pytest.approx(1.0 - 12 / 30)  # global == bucket here
+
+
+def test_merged_cache_hit_rate_and_snapshot():
+    b = StatsBoard(["a"], shards=2)
+    b["a"].stripe(0).record_cache(10, 5)
+    b["a"].stripe(1).record_cache(30, 6)
+    assert b["a"].cache_hit_rate() == pytest.approx(11 / 40)
+    b["a"].stripe(0).record_eval(10, 5, 0.01)
+    merged = b.snapshot()["a"]
+    assert merged["batches"] == 1
+    # per-stripe observability: shard 1 recorded no evals
+    assert b.snapshot(shard=1)["a"]["batches"] == 0
+    assert b.snapshot(shard=0)["a"]["batches"] == 1
+
+
+def test_thread_affine_recording_lands_on_one_stripe_per_thread():
+    b = StatsBoard(["a"], shards=4)
+    done = []
+
+    def rec():
+        for _ in range(50):
+            b["a"].record_eval(1, 1, 0.001)
+        done.append(threading.get_ident() % 4)
+
+    threads = [threading.Thread(target=rec) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10)
+    # every thread's 50 recordings landed on exactly its affine stripe
+    per_stripe = [s.batches for s in b["a"].stripes]
+    assert sum(per_stripe) == 150
+    for stripe_idx in done:
+        assert per_stripe[stripe_idx] % 50 == 0
+        assert per_stripe[stripe_idx] > 0
+
+
+def test_all_measured_uses_merged_view():
+    b = StatsBoard(["a", "b"], shards=2)
+    b["a"].stripe(0).record_eval(5, 5, 0.01)
+    assert not b.all_measured()
+    b["b"].stripe(1).record_eval(5, 5, 0.01)
+    assert b.all_measured()  # one stripe each suffices for the warmup gate
+
+
+def test_load_ledger_striped_but_consistent():
+    b = StatsBoard(["a"], shards=4)
+
+    def churn(wid):
+        for _ in range(200):
+            b.add_load(wid, 2.0)
+            b.finish_load(wid, 2.0)
+
+    threads = [threading.Thread(target=churn, args=(f"w{i}",)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10)
+    assert all(b.load_of(f"w{i}") == 0.0 for i in range(4))
