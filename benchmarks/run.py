@@ -32,7 +32,8 @@ from benchmarks.harness import csv_header, record  # noqa: E402
 SUITES = {
     "uc1": bench_uc1_routing.main,          # Fig 5 + Table 1 / Fig 6
     "uc1_synth": bench_uc1_synthetic.main,  # Fig 7
-    "uc2": bench_uc2_reuse.main,            # Fig 8 / Fig 9
+    "uc2": bench_uc2_reuse.main,            # Fig 8 / Fig 9 + repeated trace
+    "uc2_repeat": bench_uc2_reuse.main_repeat,  # cross-query reuse smoke
     "uc3": bench_uc3_laminar.main,          # Fig 11 / Fig 12
     "uc4": bench_uc4_databalance.main,      # Fig 14
     "content": bench_content_routing.main,  # beyond-paper (§2.2 lineage)

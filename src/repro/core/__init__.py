@@ -5,7 +5,10 @@ Public surface:
   CentralQueue / BoundedQueue        — §3.2/§3.3 queues, lambda watermark
   StatsBoard                         — §3.3 runtime statistics
   UDF / Predicate                    — ML UDF wrappers (shape-bucketed)
-  ReuseCache                         — §4.3 result reuse
+  ReuseCache / ContentHashCache / LayeredReuseCache — §4.3 result reuse
+    (id-keyed, content-hash + TTL, and the cross-query layered composition)
+  StatsStore / canonical_fingerprint — cross-query persistent statistics
+    (fingerprint -> age-decayed EMA cost/selectivity, warm-starts runs)
   policies: CostDriven / ScoreDriven / SelectivityDriven / ReuseAware /
             HydroPolicy; RoundRobin / DataAware / DeviceAlternating;
             PressureRanked / StaticPartition (arbiter)
@@ -18,7 +21,12 @@ Public surface:
   vectorized (two_stage_filter / cascade_filter) — TPU-native short-circuit
 """
 from repro.core.batch import RoutingBatch, make_batch  # noqa: F401
-from repro.core.cache import ReuseCache  # noqa: F401
+from repro.core.cache import (  # noqa: F401
+    ContentHashCache,
+    LayeredReuseCache,
+    ReuseCache,
+    row_digests,
+)
 from repro.core.eddy import (  # noqa: F401
     SHARD_AUTO_MAX,
     SHARD_AUTO_THRESHOLD_BPS,
@@ -49,4 +57,10 @@ from repro.core.resources import (  # noqa: F401
 )
 from repro.core.simclock import SimClock, WallClock  # noqa: F401
 from repro.core.stats import PredicateStats, StatsBoard  # noqa: F401
+from repro.core.statstore import (  # noqa: F401
+    COST_MODEL_VERSION,
+    StatsStore,
+    canonical_fingerprint,
+    fingerprint_of,
+)
 from repro.core.udf import UDF, Predicate  # noqa: F401

@@ -52,6 +52,7 @@ from repro.core.queues import CentralQueue, ClosedError
 from repro.core.resources import DRAIN_THRESHOLD_S, DevicePool, ResourceArbiter
 from repro.core.simclock import WallClock
 from repro.core.stats import StatsBoard
+from repro.core.statstore import StatsStore
 from repro.core.udf import Predicate
 from repro.kernels import launch as kernel_launch
 
@@ -79,6 +80,7 @@ class AQPExecutor:
         drain_threshold: Optional[float] = DRAIN_THRESHOLD_S,
         shards: Optional[int] = None,
         shard_auto_threshold: float = SHARD_AUTO_THRESHOLD_BPS,
+        stats_store: Optional[StatsStore] = None,
     ):
         self.predicates = predicates
         self.policy = policy or HydroPolicy()
@@ -101,6 +103,16 @@ class AQPExecutor:
             [p.name for p in predicates], cost_alpha=cost_alpha,
             shards=self._max_shards,
         )
+        # Cross-query statistics (core/statstore.py): warm-start this
+        # run's board from profiled, age-decayed records — a fully seeded
+        # board skips the warmup circulation — and record the board back
+        # (seed-only entries excluded) when the executor shuts down.
+        self.stats_store = stats_store
+        self._stats_seeded = (
+            stats_store.warm_start(self.stats, predicates)
+            if stats_store is not None else {}
+        )
+        self._stats_recorded = False
         self.central = CentralQueue(central_capacity, lam,
                                     shards=self._max_shards)
         self.output = CentralQueue(output_capacity, lam=1.0,
@@ -245,6 +257,19 @@ class AQPExecutor:
             lam.stop()
         self.central.close()
         self.output.close()
+        if self.stats_store is not None and not self._stats_recorded:
+            self._stats_recorded = True
+            try:
+                self.stats_store.record_board(
+                    self.stats, self.predicates, seeded=self._stats_seeded
+                )
+                self.stats_store.flush()
+            except Exception as e:
+                # persistence is best-effort at teardown: a full disk or
+                # yanked mount must not mask the query's actual results
+                import warnings
+
+                warnings.warn(f"StatsStore persistence failed: {e!r}")
 
     # ------------------------------ metrics ---------------------------- #
     def stats_snapshot(self):

@@ -93,7 +93,11 @@ class ReuseAware(CostDriven):
         cost = stats[p.name].cost()
         if cache is None or not p.cacheable:
             return cost
-        hit = cache.hit_rate(p.udf.name, batch.row_ids)
+        # pass the UDF's input columns so a LAYERED cache can fold
+        # content-hash hits (same payload under fresh row ids) into the
+        # paper's (1 - hit_rate) x cost estimate; id-keyed caches ignore it
+        data = {c: batch.data[c] for c in p.udf.columns if c in batch.data}
+        hit = cache.hit_rate(p.udf.name, batch.row_ids, data=data or None)
         return (1.0 - hit) * cost
 
 

@@ -312,6 +312,33 @@ class StatsBoard:
             return st.stripe(shard)
         return st
 
+    def seed_prior(self, name: str, *, cost_per_row: Optional[float] = None,
+                   selectivity: Optional[float] = None,
+                   tickets: int = 0):
+        """Warm-start an entry from a persistent statistics store.
+
+        Seeds the cost EMA and plants ``tickets`` pseudo-tickets at the
+        given selectivity (wins derived), then marks the entry measured
+        (``batches >= 1``) so the warmup circulation does not re-profile a
+        predicate another query already profiled. Pseudo-tickets bound the
+        seed's vote against fresh observations: the lottery estimator
+        folds real rows straight in, so a run that disagrees with the seed
+        out-votes it after ~``tickets`` routed rows. On a sharded board
+        the seed lands on stripe 0 and merged reads fold it exactly like
+        any other stripe's history. Call BEFORE the run starts — seeding
+        overwrites the cost EMA's current value."""
+        st = self.ensure(name)
+        target = st.stripe(0) if isinstance(st, ShardedPredicateStats) else st
+        with target._lock:
+            if cost_per_row is not None:
+                target.cost_per_row.value = float(cost_per_row)
+            if selectivity is not None and tickets > 0:
+                sel = min(max(float(selectivity), 0.0), 1.0)
+                target.tickets += int(tickets)
+                target.wins += int(round(tickets * (1.0 - sel)))
+            target.batches = max(target.batches, 1)
+        return st
+
     def ensure_kernel(self, name: str) -> PredicateStats:
         """Entry for a kernel-launch timing stream.
 

@@ -44,6 +44,10 @@ class UDF:
     warm_fn: Optional[Callable[[], None]] = None  # lazy init (GACU)
     cost_model: Optional[Callable[[int], float]] = None
     proxy_cost: Optional[Callable[[Dict[str, np.ndarray]], float]] = None
+    # canonical cross-process identity (kernel + config + cost-model
+    # version, see core/statstore.canonical_fingerprint) keying the
+    # persistent statistics store; None falls back to udf:<name>
+    fingerprint: Optional[str] = None
     _ready: bool = field(default=False, repr=False)
     # output dtype + trailing shape, learned from the first evaluation so
     # zero-row calls don't have to launch the kernel just for metadata

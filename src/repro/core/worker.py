@@ -58,7 +58,10 @@ def evaluate_predicate(
     computed_rows = rows
 
     if cache is not None and pred.cacheable:
-        hits, vals = cache.probe(pred.udf.name, batch.row_ids)
+        # batch-aware probe: a layered cache digests the row payloads so
+        # content-identical rows hit even under fresh row ids; the id-keyed
+        # base cache ignores the payload argument
+        hits, vals = cache.probe_batch(pred.udf.name, batch.row_ids, data)
         stats[pred.name].record_cache(rows, int(hits.sum()))
         if hits.any():
             miss = ~hits
@@ -71,7 +74,8 @@ def evaluate_predicate(
                 t0 = time.perf_counter()
                 sub_out = pred.evaluate_outputs(sub)
                 wall = time.perf_counter() - t0
-                cache.put(pred.udf.name, batch.row_ids[miss], sub_out)
+                cache.put_batch(pred.udf.name, batch.row_ids[miss], sub,
+                                sub_out)
                 for j, i in enumerate(np.nonzero(miss)[0]):
                     outputs[i] = sub_out[j]
             else:
@@ -81,7 +85,7 @@ def evaluate_predicate(
             t0 = time.perf_counter()
             outputs = pred.evaluate_outputs(data)
             wall = time.perf_counter() - t0
-            cache.put(pred.udf.name, batch.row_ids, outputs)
+            cache.put_batch(pred.udf.name, batch.row_ids, data, outputs)
     else:
         t0 = time.perf_counter()
         outputs = pred.evaluate_outputs(data)

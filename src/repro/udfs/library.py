@@ -12,7 +12,12 @@ Every builder returns a first-class ``Predicate`` whose UDF
   * declares a data-aware ``proxy_cost`` (crop pixels / live tokens) for
     the Laminar data-balancing policy;
   * keeps ``bucket=True`` so row counts quantize to powers of two and a
-    handful of executables serve any batch (§5.1's recompilation answer).
+    handful of executables serve any batch (§5.1's recompilation answer);
+  * carries a canonical ``fingerprint`` (kernel name + every config knob
+    that changes the predicate's decision, incl. the compare target, +
+    cost-model version — ``core/statstore.canonical_fingerprint``) so the
+    persistent StatsStore warm-starts the same predicate across processes
+    and never conflates two configurations of one kernel.
 
 Text-consuming kernels (moe_router, ssd, rglru, flash/decode attention)
 share a deterministic seeded featurizer: token ids index fixed embedding
@@ -26,6 +31,7 @@ from typing import Callable, Dict
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.statstore import canonical_fingerprint
 from repro.core.udf import Predicate, UDF
 from repro.kernels import ops, ref
 from repro.udfs import rooflines
@@ -113,6 +119,8 @@ def color_predicate(
                                {"crop": np.float32}),
         cost_model=rooflines.hsv_color(size, size).cost_model,
         proxy_cost=lambda d: float(np.asarray(d["crop"]).size),
+        fingerprint=canonical_fingerprint(
+            "hsv_color", color=color, size=size, impl=impl),
     )
     return Predicate(name, udf, compare=lambda o: o == target)
 
@@ -154,6 +162,9 @@ def topic_router_predicate(
         warm_fn=one_row_probe(fn, {"tokens": (seq,)}, {"tokens": np.int32}),
         cost_model=rooflines.moe_router(n_experts, k).cost_model,
         proxy_cost=_token_proxy,
+        fingerprint=canonical_fingerprint(
+            "moe_router", expert=expert, n_experts=n_experts, k=k, dim=dim,
+            vocab=vocab, seq=seq, seed=seed, impl=impl),
     )
     return Predicate(name, udf, compare=lambda o: o == expert)
 
@@ -200,6 +211,10 @@ def ssd_scorer_predicate(
         warm_fn=one_row_probe(fn, {"tokens": (seq,)}, {"tokens": np.int32}),
         cost_model=rooflines.ssd(seq, heads, head_dim, state).cost_model,
         proxy_cost=_token_proxy,
+        fingerprint=canonical_fingerprint(
+            "ssd", threshold=threshold, seq=seq, heads=heads,
+            head_dim=head_dim, state=state, vocab=vocab, seed=seed,
+            impl=impl),
     )
     return Predicate(name, udf, compare=lambda o: o > threshold)
 
@@ -236,6 +251,9 @@ def rglru_gate_predicate(
         warm_fn=one_row_probe(fn, {"tokens": (seq,)}, {"tokens": np.int32}),
         cost_model=rooflines.rglru(seq, width).cost_model,
         proxy_cost=_token_proxy,
+        fingerprint=canonical_fingerprint(
+            "rglru", threshold=threshold, seq=seq, width=width, vocab=vocab,
+            seed=seed, impl=impl),
     )
     return Predicate(name, udf, compare=lambda o: o > threshold)
 
@@ -276,6 +294,9 @@ def attention_scorer_predicate(
         warm_fn=one_row_probe(fn, {"tokens": (seq,)}, {"tokens": np.int32}),
         cost_model=rooflines.flash_attention(seq, heads, head_dim).cost_model,
         proxy_cost=_token_proxy,
+        fingerprint=canonical_fingerprint(
+            "flash_attention", threshold=threshold, seq=seq, heads=heads,
+            head_dim=head_dim, vocab=vocab, seed=seed, impl=impl),
     )
     return Predicate(name, udf, compare=lambda o: o > threshold)
 
@@ -322,6 +343,10 @@ def decode_relevance_predicate(
         cost_model=rooflines.decode_attention(
             seq, heads, head_dim, kv_heads).cost_model,
         proxy_cost=_token_proxy,
+        fingerprint=canonical_fingerprint(
+            "decode_attention", threshold=threshold, seq=seq, heads=heads,
+            head_dim=head_dim, kv_heads=kv_heads, vocab=vocab, seed=seed,
+            impl=impl),
     )
     return Predicate(name, udf, compare=lambda o: o > threshold)
 

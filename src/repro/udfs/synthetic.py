@@ -21,6 +21,7 @@ from typing import Iterable
 
 import numpy as np
 
+from repro.core.statstore import canonical_fingerprint
 from repro.core.udf import Predicate, UDF
 from repro.kernels import ops
 from repro.udfs.library import block_divisor, one_row_probe
@@ -45,6 +46,11 @@ def planted_predicate(
         resource=resource,
         cost_model=lambda rows: rows * cost_per_row,
         bucket=False,
+        # planted sets are benchmark-local, so the fingerprint keys on the
+        # planted NAME + cost config: re-building the same scenario in a
+        # fresh process maps to the same persistent-statistics record
+        fingerprint=canonical_fingerprint(
+            f"planted:{name}", cost_per_row=cost_per_row, column=column),
     )
     return Predicate(name, udf, compare=lambda o: o.astype(bool))
 

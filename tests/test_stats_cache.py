@@ -1,9 +1,15 @@
-"""StatsBoard / PredicateStats / ReuseCache unit tests (§3.3, §4.3)."""
+"""StatsBoard / PredicateStats / ReuseCache unit tests (§3.3, §4.3).
+
+Includes the ReuseCache hardening regressions (extension-less path,
+ragged flush, atomic flush + corrupt-tolerant load, vectorized/values-free
+probing) and the content-hash + layered cache TTL/invalidation semantics."""
 import os
 
 import numpy as np
+import pytest
 
-from repro.core import ReuseCache
+from repro.core import ContentHashCache, LayeredReuseCache, ReuseCache
+from repro.core.cache import row_digests
 from repro.core.stats import Ema, PredicateStats, StatsBoard
 
 
@@ -72,3 +78,205 @@ def test_cache_vector_values():
     c.put("udf", np.array([7]), np.ones((1, 4)))
     hits, vals = c.probe("udf", np.array([7]))
     assert hits.all() and vals[0].shape == (4,)
+
+
+# ------------------- ReuseCache hardening regressions ------------------- #
+def test_cache_path_without_npz_extension_roundtrips(tmp_path):
+    """np.savez appends .npz on write; an un-normalized path used to read
+    the literal (absent) file and silently start the next process cold."""
+    path = os.path.join(tmp_path, "cache")  # no extension
+    c = ReuseCache(path)
+    c.put("udf", np.arange(4), np.arange(4) * 2.0)
+    c.flush()
+    assert os.path.exists(os.path.join(tmp_path, "cache.npz"))
+    c2 = ReuseCache(path)
+    hits, vals = c2.probe("udf", np.array([2, 3]))
+    assert hits.all() and vals[0] == 4.0 and vals[1] == 6.0
+
+
+def test_cache_flush_ragged_values_roundtrip(tmp_path):
+    """Heterogeneous shapes per UDF (variable-length detector boxes) used
+    to crash flush's unconditional np.stack with ValueError."""
+    path = os.path.join(tmp_path, "ragged.npz")
+    c = ReuseCache(path)
+    c.put("det", np.array([1]), [np.ones((2, 4))])       # 2 boxes
+    c.put("det", np.array([2]), [np.zeros((5, 4))])      # 5 boxes
+    c.put("det", np.array([3]), [np.full((2, 4), 7.0)])  # 2 boxes again
+    c.put("scalar", np.array([9]), np.array([3.5]))
+    c.flush()
+    c2 = ReuseCache(path)
+    hits, vals = c2.probe("det", np.array([1, 2, 3]))
+    assert hits.all()
+    np.testing.assert_array_equal(vals[0], np.ones((2, 4)))
+    np.testing.assert_array_equal(vals[1], np.zeros((5, 4)))
+    np.testing.assert_array_equal(vals[2], np.full((2, 4), 7.0))
+    _, svals = c2.probe("scalar", np.array([9]))
+    assert svals[0] == 3.5
+
+
+def test_cache_flush_atomic_under_midwrite_crash(tmp_path, monkeypatch):
+    """A crash mid-flush must leave the PREVIOUS snapshot readable."""
+    path = os.path.join(tmp_path, "atomic.npz")
+    c = ReuseCache(path)
+    c.put("udf", np.arange(3), np.arange(3) * 1.0)
+    c.flush()
+
+    def boom(*a, **kw):
+        raise OSError("disk died mid-write")
+
+    monkeypatch.setattr(np, "savez", boom)
+    c.put("udf", np.array([99]), np.array([99.0]))
+    with pytest.raises(OSError):
+        c.flush()
+    monkeypatch.undo()
+    c2 = ReuseCache(path)  # old snapshot intact, loads clean
+    hits, vals = c2.probe("udf", np.array([0, 1, 2]))
+    assert hits.all() and vals[2] == 2.0
+
+
+def test_cache_load_corrupt_file_starts_cold(tmp_path):
+    """A corrupt/empty snapshot warns and starts cold instead of raising
+    at construction (the old _load let ZipFile errors escape)."""
+    path = os.path.join(tmp_path, "corrupt.npz")
+    with open(path, "wb") as f:
+        f.write(b"not an npz at all")
+    with pytest.warns(UserWarning, match="starting cold"):
+        c = ReuseCache(path)
+    assert c.size("udf") == 0
+    c.put("udf", np.array([1]), np.array([1.0]))
+    c.flush()  # and the path is usable again
+    assert ReuseCache(path).size("udf") == 1
+
+    with open(path, "wb"):
+        pass  # zero-byte file
+    with pytest.warns(UserWarning, match="starting cold"):
+        assert ReuseCache(path).size("udf") == 0
+
+
+def test_hit_rate_is_values_free(monkeypatch):
+    """hit_rate must not call probe (the old one materialized every value
+    and threw it away on the ReuseAware routing hot path)."""
+    c = ReuseCache()
+    c.put("udf", np.arange(10), np.arange(10) * 1.0)
+
+    def no_probe(*a, **kw):
+        raise AssertionError("hit_rate must not materialize values")
+
+    monkeypatch.setattr(c, "probe", no_probe)
+    assert c.hit_rate("udf", np.array([0, 1, 20, 21])) == 0.5
+    assert c.hit_rate("udf", np.array([])) == 0.0
+
+
+def test_vectorized_probe_matches_dict_semantics():
+    c = ReuseCache()
+    ids = np.array([5, 1, 9, 1, 400])  # unsorted, duplicated
+    c.put("udf", np.array([1, 9]), np.array([10.0, 90.0]))
+    hits, vals = c.probe("udf", ids)
+    np.testing.assert_array_equal(hits, [False, True, True, True, False])
+    assert vals[1] == 10.0 and vals[2] == 90.0 and vals[3] == 10.0
+    assert vals[0] is None and vals[4] is None
+    # probing a udf never written stays all-miss
+    hits, _ = c.probe("other", ids)
+    assert not hits.any()
+
+
+def test_cache_invalidate():
+    c = ReuseCache()
+    c.put("a", np.arange(3), np.arange(3) * 1.0)
+    c.put("b", np.arange(3), np.arange(3) * 1.0)
+    c.invalidate("a")
+    assert c.size("a") == 0 and c.size("b") == 3
+    c.invalidate()
+    assert c.size("b") == 0
+
+
+# --------------------- content-hash cache semantics --------------------- #
+def _payload(rids):
+    return {"rid": np.asarray(rids)}
+
+
+def test_row_digests_content_identity():
+    a = row_digests(_payload([1, 2, 3]))
+    b = row_digests(_payload([1, 2, 3]))
+    np.testing.assert_array_equal(a, b)          # deterministic
+    assert a[0] != a[1]                          # distinct content differs
+    # dtype and column name are part of the digest
+    x = row_digests({"c": np.array([1], np.int64)})
+    assert row_digests({"c": np.array([1.0])})[0] != x[0]
+    assert row_digests({"d": np.array([1], np.int64)})[0] != x[0]
+
+
+def test_content_cache_hits_across_row_ids():
+    """The tentpole semantics: identical payload under FRESH row ids hits."""
+    c = ContentHashCache()
+    c.put_batch("udf", np.arange(3), _payload([10, 11, 12]), np.arange(3.0))
+    hits, vals = c.probe_batch("udf", np.arange(3) + 1000,
+                               _payload([10, 11, 12]))
+    assert hits.all() and vals[0] == 0.0 and vals[2] == 2.0
+    hits, _ = c.probe_batch("udf", np.arange(2), _payload([10, 99]))
+    np.testing.assert_array_equal(hits, [True, False])
+
+
+def test_content_cache_ttl_expiry():
+    now = [0.0]
+    c = ContentHashCache(ttl_s=10.0, clock=lambda: now[0])
+    c.put_batch("udf", np.arange(2), _payload([1, 2]), np.ones(2))
+    assert c.hit_rate("udf", np.arange(2), data=_payload([1, 2])) == 1.0
+    now[0] = 9.0
+    assert c.hit_rate("udf", np.arange(2), data=_payload([1, 2])) == 1.0
+    now[0] = 11.0  # past TTL: read as miss and evict lazily
+    assert c.hit_rate("udf", np.arange(2), data=_payload([1, 2])) == 0.0
+    hits, _ = c.probe_batch("udf", np.arange(2), _payload([1, 2]))
+    assert not hits.any()
+    assert c.size("udf") == 0  # probe evicted the expired entries
+
+
+def test_content_cache_explicit_invalidation():
+    c = ContentHashCache()
+    c.put_batch("a", np.arange(2), _payload([1, 2]), np.ones(2))
+    c.put_batch("b", np.arange(2), _payload([1, 2]), np.ones(2))
+    c.invalidate("a")
+    assert c.size("a") == 0 and c.size("b") == 2
+    c.invalidate()
+    assert c.size("b") == 0
+
+
+# ------------------------- layered composition ------------------------- #
+def test_layered_cache_content_fallthrough_and_promotion():
+    lc = LayeredReuseCache()
+    lc.put_batch("udf", np.arange(3), _payload([7, 8, 9]), np.arange(3.0))
+    # fresh row ids: the id layer misses, the content layer hits
+    new_ids = np.arange(3) + 500
+    assert lc.ids.hit_mask("udf", new_ids).sum() == 0
+    hits, vals = lc.probe_batch("udf", new_ids, _payload([7, 8, 9]))
+    assert hits.all() and vals[1] == 1.0
+    # promotion: the id layer now answers for the new ids directly
+    assert lc.ids.hit_mask("udf", new_ids).all()
+
+
+def test_layered_hit_rate_folds_both_layers():
+    lc = LayeredReuseCache()
+    lc.put_batch("udf", np.arange(4), _payload([0, 1, 2, 3]), np.ones(4))
+    # 2 id-hits + 1 content-hit (payload 3 under a new id) + 1 true miss
+    ids = np.array([0, 1, 600, 601])
+    rate = lc.hit_rate("udf", ids, data=_payload([0, 1, 3, 99]))
+    assert rate == 0.75
+    # without payload data only the id layer answers
+    assert lc.hit_rate("udf", ids) == 0.5
+
+
+def test_layered_cache_disk_spill_ids_layer(tmp_path):
+    path = os.path.join(tmp_path, "layered")
+    lc = LayeredReuseCache(path)
+    lc.put_batch("udf", np.arange(2), _payload([1, 2]), np.ones(2))
+    lc.flush()
+    lc2 = LayeredReuseCache(path)
+    assert lc2.ids.hit_mask("udf", np.arange(2)).all()
+
+
+def test_layered_invalidate_clears_both_layers():
+    lc = LayeredReuseCache()
+    lc.put_batch("udf", np.arange(2), _payload([1, 2]), np.ones(2))
+    lc.invalidate("udf")
+    hits, _ = lc.probe_batch("udf", np.arange(2), _payload([1, 2]))
+    assert not hits.any()

@@ -1,0 +1,274 @@
+"""StatsStore: cross-query statistics persistence (core/statstore.py).
+
+Covers warm-start seeding of ``StatsBoard``, age decay (stale profiles
+lose to fresh observations), fingerprint stability across processes,
+atomic/tolerant persistence, and the executor round-trip."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AQPExecutor, LayeredReuseCache, SimClock, StatsBoard, StatsStore,
+    canonical_fingerprint, fingerprint_of, make_batch,
+)
+from repro.udfs.synthetic import planted_predicate
+
+
+def _store(**kw):
+    kw.setdefault("clock", lambda: 1000.0)
+    return StatsStore(**kw)
+
+
+def _pred(name="p", cost=0.01, ids=range(50)):
+    return planted_predicate(name, ids, cost_per_row=cost)
+
+
+# ----------------------------- warm start ----------------------------- #
+def test_warm_start_seeds_board_measured():
+    store = _store()
+    p = _pred()
+    store.observe(fingerprint_of(p), cost_per_row=0.02, selectivity=0.25)
+    board = StatsBoard([p.name])
+    assert not board[p.name].measured
+    seeded = store.warm_start(board, [p])
+    st = board[p.name]
+    assert seeded == {p.name: 1}
+    assert st.measured            # warmup circulation will be skipped
+    assert st.cost() == pytest.approx(0.02)
+    assert st.selectivity() == pytest.approx(0.25, abs=0.01)
+
+
+def test_warm_start_unknown_fingerprint_is_noop():
+    store = _store()
+    p = _pred()
+    board = StatsBoard([p.name])
+    assert store.warm_start(board, [p]) == {}
+    assert not board[p.name].measured
+
+
+def test_seed_prior_pseudo_tickets_outvoted_by_fresh_rows():
+    """The seed is a bounded prior: fresh lottery rows out-vote it."""
+    board = StatsBoard(["p"])
+    board.seed_prior("p", cost_per_row=0.01, selectivity=0.9, tickets=100)
+    assert board["p"].selectivity() == pytest.approx(0.9)
+    # a run that strongly disagrees (10% pass) dominates after ~10x rows
+    board["p"].record_eval(1000, 100, seconds=1.0)
+    assert board["p"].selectivity() < 0.2
+
+
+def test_seed_prior_on_sharded_board_merges():
+    board = StatsBoard(["p"], shards=4)
+    board.seed_prior("p", cost_per_row=0.5, selectivity=0.25, tickets=64)
+    st = board["p"]
+    assert st.measured
+    assert st.cost() == pytest.approx(0.5)
+    assert st.selectivity() == pytest.approx(0.25, abs=0.02)
+
+
+# ------------------------------ decay ------------------------------ #
+def test_age_decay_scales_seed_weight():
+    now = [0.0]
+    store = StatsStore(half_life_s=100.0, pseudo_tickets=200,
+                      clock=lambda: now[0])
+    p = _pred()
+    store.observe(fingerprint_of(p), cost_per_row=0.02, selectivity=0.9)
+
+    now[0] = 100.0  # one half-life: half the pseudo-tickets
+    board = StatsBoard([p.name])
+    store.warm_start(board, [p])
+    assert board[p.name].tickets == 100
+
+    fresh_board = StatsBoard([p.name])
+    now[0] = 0.0
+    store.warm_start(fresh_board, [p])
+    assert fresh_board[p.name].tickets == 200
+
+
+def test_stale_record_not_seeded_at_all():
+    now = [0.0]
+    store = StatsStore(half_life_s=10.0, min_weight=0.05,
+                      clock=lambda: now[0])
+    p = _pred()
+    store.observe(fingerprint_of(p), cost_per_row=0.02, selectivity=0.5)
+    now[0] = 10.0 * 10  # 10 half-lives: weight ~1e-3 < min_weight
+    board = StatsBoard([p.name])
+    assert store.warm_start(board, [p]) == {}
+    assert not board[p.name].measured
+
+
+def test_decayed_seed_loses_to_fresh_observations_faster():
+    """The headline decay property: an aged profile seeds fewer
+    pseudo-tickets, so the same fresh evidence moves the estimate
+    further than it would against a fresh seed."""
+    now = [0.0]
+
+    def seeded_then_observed(age):
+        store = StatsStore(half_life_s=50.0, pseudo_tickets=400,
+                           clock=lambda: now[0])
+        p = _pred()
+        now[0] = 0.0
+        store.observe(fingerprint_of(p), cost_per_row=0.02, selectivity=0.9)
+        now[0] = age
+        board = StatsBoard([p.name])
+        store.warm_start(board, [p])
+        board[p.name].record_eval(100, 10, seconds=1.0)  # fresh: sel 0.1
+        return board[p.name].selectivity()
+
+    assert seeded_then_observed(age=200.0) < seeded_then_observed(age=0.0)
+
+
+def test_observe_blend_is_age_weighted():
+    now = [0.0]
+    store = StatsStore(half_life_s=10.0, alpha=0.3, clock=lambda: now[0])
+    store.observe("fp", cost_per_row=1.0, selectivity=0.5)
+    now[0] = 1000.0  # ancient: the re-observation should dominate
+    store.observe("fp", cost_per_row=3.0, selectivity=0.1)
+    rec = store.get("fp")
+    assert rec["cost_per_row"] == pytest.approx(3.0, rel=0.01)
+    assert rec["selectivity"] == pytest.approx(0.1, abs=0.01)
+
+
+# --------------------------- fingerprints --------------------------- #
+def test_fingerprint_deterministic_and_config_sensitive():
+    a = canonical_fingerprint("hsv_color", color="black", size=64)
+    assert a == canonical_fingerprint("hsv_color", size=64, color="black")
+    assert a != canonical_fingerprint("hsv_color", color="white", size=64)
+    assert a != canonical_fingerprint("hsv_color", color="black", size=64,
+                                      version=2)
+    assert "cmv=" in a
+
+
+def test_fingerprint_stable_across_processes():
+    """Fingerprints must not depend on process-randomized hashing."""
+    code = (
+        "from repro.udfs.library import color_predicate\n"
+        "from repro.core import fingerprint_of\n"
+        "print(fingerprint_of(color_predicate('black', size=64)))\n"
+    )
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, check=True)
+    from repro.udfs.library import color_predicate
+
+    assert out.stdout.strip() == fingerprint_of(color_predicate("black",
+                                                                size=64))
+
+
+def test_fingerprint_fallback_for_adhoc_udf():
+    p = _pred("adhoc")
+    q = _pred("adhoc")
+    assert fingerprint_of(p) == fingerprint_of(q)
+    assert fingerprint_of(p) != fingerprint_of(_pred("other"))
+
+
+# --------------------------- persistence --------------------------- #
+def test_store_roundtrip(tmp_path):
+    path = os.path.join(tmp_path, "stats.json")
+    store = _store(path=path)
+    store.observe("fp", cost_per_row=0.5, selectivity=0.75, batches=3)
+    store.flush()
+    store2 = _store(path=path)
+    rec = store2.get("fp")
+    assert rec["cost_per_row"] == 0.5
+    assert rec["selectivity"] == 0.75
+    assert rec["batches"] == 3
+
+
+def test_store_corrupt_file_starts_cold(tmp_path):
+    path = os.path.join(tmp_path, "stats.json")
+    with open(path, "w") as f:
+        f.write("{ not json")
+    with pytest.warns(UserWarning, match="starting cold"):
+        store = _store(path=path)
+    assert len(store) == 0
+    store.observe("fp", cost_per_row=1.0, selectivity=0.5)
+    store.flush()
+    assert _store(path=path).get("fp") is not None
+
+
+def test_store_flush_atomic(tmp_path, monkeypatch):
+    path = os.path.join(tmp_path, "stats.json")
+    store = _store(path=path)
+    store.observe("fp", cost_per_row=1.0, selectivity=0.5)
+    store.flush()
+
+    real_replace = os.replace
+
+    def boom(*a):
+        raise OSError("yanked")
+
+    monkeypatch.setattr(os, "replace", boom)
+    store.observe("fp2", cost_per_row=2.0, selectivity=0.5)
+    with pytest.raises(OSError):
+        store.flush()
+    monkeypatch.setattr(os, "replace", real_replace)
+    blob = json.load(open(path))
+    assert "fp" in blob["records"] and "fp2" not in blob["records"]
+
+
+def test_record_board_skips_seed_only_entries():
+    """A run that never profiled anything must not refresh updated_at."""
+    now = [0.0]
+    store = StatsStore(clock=lambda: now[0])
+    p = _pred()
+    store.observe(fingerprint_of(p), cost_per_row=0.02, selectivity=0.5)
+    now[0] = 500.0
+    board = StatsBoard([p.name])
+    seeded = store.warm_start(board, [p])
+    store.record_board(board, [p], seeded=seeded)  # nothing new observed
+    assert store.get(fingerprint_of(p))["updated_at"] == 0.0
+    board[p.name].record_eval(10, 5, seconds=0.1)  # now something real
+    store.record_board(board, [p], seeded=seeded)
+    assert store.get(fingerprint_of(p))["updated_at"] == 500.0
+
+
+# --------------------------- executor glue --------------------------- #
+def _run_query(store, cache=None):
+    p1 = planted_predicate("sq_a", range(0, 60), cost_per_row=0.01)
+    p2 = planted_predicate("sq_b", range(30, 90), cost_per_row=0.03,
+                           resource="tpu:1")
+    src = [make_batch({"rid": np.arange(i, i + 10)}, np.arange(i, i + 10))
+           for i in range(0, 100, 10)]
+    ex = AQPExecutor([p1, p2], clock=SimClock(), max_workers=1,
+                     cache=cache, stats_store=store)
+    got = set()
+    for b in ex.run(iter(src)):
+        got |= {int(i) for i in b.row_ids}
+    assert got == set(range(30, 60))
+    return ex
+
+
+def test_executor_roundtrip_warm_starts_second_run(tmp_path):
+    path = os.path.join(tmp_path, "stats.json")
+    store = StatsStore(path)
+    _run_query(store)
+    rec = store.get(canonical_fingerprint("planted:sq_b",
+                                          cost_per_row=0.03, column="rid"))
+    assert rec is not None
+    assert rec["cost_per_row"] == pytest.approx(0.03, rel=0.2)
+    assert os.path.exists(path)  # shutdown flushed
+
+    # a NEW store (fresh process analogue) warm-starts the next executor
+    store2 = StatsStore(path)
+    p1 = planted_predicate("sq_a", range(0, 60), cost_per_row=0.01)
+    p2 = planted_predicate("sq_b", range(30, 90), cost_per_row=0.03,
+                           resource="tpu:1")
+    ex = AQPExecutor([p1, p2], clock=SimClock(), max_workers=1,
+                     stats_store=store2)
+    assert ex.stats["sq_a"].measured and ex.stats["sq_b"].measured
+    assert ex.stats["sq_b"].cost() == pytest.approx(0.03, rel=0.2)
+    ex.shutdown()
+
+
+def test_executor_with_layered_cache_and_store(tmp_path):
+    """Smoke the full tentpole stack through one executor."""
+    store = StatsStore(os.path.join(tmp_path, "s.json"))
+    cache = LayeredReuseCache(os.path.join(tmp_path, "c.npz"))
+    _run_query(store, cache=cache)
+    assert cache.size("sq_a") > 0 or cache.size("sq_b") > 0
