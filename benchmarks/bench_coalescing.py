@@ -1,0 +1,244 @@
+"""Adaptive micro-batch coalescing: fused-launch throughput vs per-batch.
+
+The workload is the regime the coalescing layer targets: a stream of tiny
+(8-row) batches through predicates whose per-invocation cost is dominated
+by a FIXED launch term —
+
+* SLEEP predicates: ``fixed + marginal*rows`` sleeps standing in for a
+  GIL-releasing accelerator dispatch, with the matching affine cost model
+  (the planner's roofline-style seed);
+* a SATURATED predicate: pure per-row cost, ~zero launch overhead — the
+  adaptive planner must be decline-dominant on it (asserted);
+* DETECTOR predicates: real interpret-mode Pallas HSV-kernel launches
+  (udfs/synthetic.planted_detector) whose per-launch interpret overhead is
+  ~flat in rows — the honest analogue of a cold dispatch path, and exactly
+  what fusing amortizes.
+
+Three executor runs — ``coalesce=off``, ``coalesce="fixed"`` (k-batch
+ablation), ``coalesce="adaptive"`` — over the identical batch stream.
+
+Correctness gates, BOTH modes: every run completes the exact same row-id
+MULTISET as the naive planted ground truth (fusing is invisible to
+results); the adaptive run fused every sleep/detector predicate and was
+decline-dominant on the saturated one.
+
+Timing gate, BOTH modes: adaptive >= MIN_ADAPTIVE_SPEEDUP x batches/s over
+off. Unlike the sharded-routing bench this is core-count independent —
+the speedup comes from paying the fixed launch term once per fused group
+instead of once per batch, so it survives a loaded 1-core runner.
+
+Modes (env COALESCE_BENCH_MODE or ``main(mode=...)``):
+  smoke — CI-sized (1 detector, 24 batches, ~10 s); regenerates
+          BENCH_coalescing.json so the artifact always matches the harness.
+  full  — the committed-artifact run (2 detectors, 64 batches).
+
+The artifact is written by THIS harness (never hand-edited): repo-root
+BENCH_coalescing.json, one entry per coalesce mode plus host metadata.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from benchmarks.harness import record
+from repro.core import AQPExecutor, CostDriven, Predicate, UDF, make_batch
+from repro.udfs.synthetic import planted_detector
+
+ROWS_PER_BATCH = 8
+WORK_DIM = 32            # detector crop edge (rows reshape to 32x32x3)
+CENTRAL_CAPACITY = 128   # deep watermark: keep the pipeline saturated
+COALESCE_MODES = (None, "fixed", "adaptive")
+
+# sleep predicates: per-launch fixed + per-row marginal (seconds)
+SLEEP_FIXED_S = (0.002, 0.0025, 0.003, 0.0035)
+SLEEP_MARGINAL_S = 2e-5
+# saturated predicate: pure per-row cost, nothing to amortize
+SATURATED_PER_ROW_S = 6e-5
+
+FULL_BATCHES, FULL_DETECTORS = 64, 2
+SMOKE_BATCHES, SMOKE_DETECTORS = 24, 1
+
+MIN_ADAPTIVE_SPEEDUP = 1.5  # enforced in BOTH modes (core-count independent)
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_coalescing.json")
+
+
+def build_predicates(n_detectors: int, planted: List[np.ndarray]) -> List[Predicate]:
+    preds = []
+    for i, fixed in enumerate(SLEEP_FIXED_S):
+        def fn(cols, _f=fixed):
+            time.sleep(_f + SLEEP_MARGINAL_S * len(cols["rid"]))
+            return np.ones(len(cols["rid"]), dtype=bool)
+
+        udf = UDF(name=f"sleep{i}", fn=fn, columns=("rid",), bucket=False,
+                  resource=f"r{i}",
+                  cost_model=lambda r, _f=fixed: _f + SLEEP_MARGINAL_S * r)
+        preds.append(Predicate(name=f"sleep{i}", udf=udf,
+                               compare=lambda out: out.astype(bool)))
+
+    def sat_fn(cols):
+        # busy-wait, not time.sleep: sleep's ~0.5 ms timer slack would BE a
+        # fixed launch term, and the online fit would (correctly) find it —
+        # a predicate whose wall cost is honestly per-row must spin
+        t_end = time.perf_counter() + SATURATED_PER_ROW_S * len(cols["rid"])
+        while time.perf_counter() < t_end:
+            pass
+        return cols["rid"] % 7 != 0
+
+    sat = UDF(name="saturated", fn=sat_fn, columns=("rid",), bucket=False,
+              resource="rsat",
+              cost_model=lambda r: SATURATED_PER_ROW_S * r)  # fixed == 0
+    preds.append(Predicate(name="saturated", udf=sat,
+                           compare=lambda out: out.astype(bool)))
+
+    for d in range(n_detectors):
+        preds.append(planted_detector(
+            f"detector{d}", planted[d], work_dim=WORK_DIM,
+            resource=f"tpu:{d}"))
+    return preds
+
+
+def build_batches(n: int, rng: np.random.Generator):
+    out = []
+    for b in range(n):
+        rid = np.arange(b * ROWS_PER_BATCH, (b + 1) * ROWS_PER_BATCH)
+        frame = rng.random(
+            (ROWS_PER_BATCH, WORK_DIM, WORK_DIM, 3), dtype=np.float32)
+        out.append(make_batch({"rid": rid, "frame": frame}, row_ids=rid))
+    return out
+
+
+def expected_row_ids(n_rows: int, planted: List[np.ndarray]):
+    rid = np.arange(n_rows)
+    mask = rid % 7 != 0  # the saturated predicate; sleeps pass all rows
+    for p in planted:
+        mask &= p[:n_rows]
+    return collections.Counter(rid[mask].tolist())
+
+
+def run_once(coalesce, preds, batches):
+    ex = AQPExecutor(
+        preds,
+        policy=CostDriven(),
+        max_workers=1,          # fixed stage capacity: queues back up, fuse
+        warmup=False,
+        coalesce=coalesce,
+        central_capacity=CENTRAL_CAPACITY,
+    )
+    t0 = time.perf_counter()
+    done = ex.collect(iter(batches))
+    elapsed = time.perf_counter() - t0
+    row_ids = collections.Counter()
+    for b in done:
+        row_ids.update(b.row_ids.tolist())
+    snap = ex.stats_snapshot()
+    per_pred = {
+        p.name: {
+            "launches": snap[p.name]["launches"],
+            "fused_launches": snap[p.name]["fused_launches"],
+            "fused_batches": snap[p.name]["fused_batches"],
+        }
+        for p in preds
+    }
+    return {
+        "coalesce": "off" if coalesce is None else coalesce,
+        "batches": len(done),
+        "elapsed_s": elapsed,
+        "batches_per_s": len(batches) / elapsed,
+        "launches": sum(v["launches"] for v in per_pred.values()),
+        "fused_launches": sum(v["fused_launches"] for v in per_pred.values()),
+        "predicates": per_pred,
+        "planner": snap.get("_coalesce"),
+    }, row_ids
+
+
+def main(mode: Optional[str] = None) -> dict:
+    mode = mode or os.environ.get("COALESCE_BENCH_MODE", "smoke")
+    assert mode in ("smoke", "full"), mode
+    n = FULL_BATCHES if mode == "full" else SMOKE_BATCHES
+    n_detectors = FULL_DETECTORS if mode == "full" else SMOKE_DETECTORS
+
+    rng = np.random.default_rng(7)
+    n_rows = n * ROWS_PER_BATCH
+    planted = [rng.random(n_rows) < 0.8 for _ in range(n_detectors)]
+    preds = build_predicates(n_detectors, planted)
+    batches = build_batches(n, rng)
+    expected = expected_row_ids(n_rows, planted)
+
+    runs, off_bps = [], None
+    for coalesce in COALESCE_MODES:
+        result, row_ids = run_once(coalesce, preds, batches)
+        # correctness gate, BOTH modes, EVERY coalesce mode: fusing is
+        # invisible to results — the exact planted row-id multiset
+        assert row_ids == expected, (
+            f"coalesce={result['coalesce']} lost/duplicated rows: "
+            f"extra={row_ids - expected} missing={expected - row_ids}"
+        )
+        if off_bps is None:
+            off_bps = result["batches_per_s"]
+        else:
+            result["speedup"] = result["batches_per_s"] / off_bps
+        runs.append(result)
+        record(
+            f"coalescing/{result['coalesce']}",
+            result["elapsed_s"] / n * 1e6,
+            f"bps={result['batches_per_s']:.1f};launches={result['launches']}"
+            + (f";speedup={result['speedup']:.2f}x" if "speedup" in result
+               else ""),
+        )
+
+    adaptive = runs[-1]
+    # the adaptive policy's decline contract: launch-dominated predicates
+    # fused; the saturated predicate is DECLINE-DOMINANT. (Not zero-fused:
+    # once upstream filtering gives its arrivals row-count spread, the
+    # online fit measures the genuine ~0.1 ms sleep/call overhead and may
+    # occasionally judge a fuse worthwhile — that is the planner reading
+    # reality, and reality has no perfectly-fixed-cost-free predicate.)
+    sat_plan = adaptive["planner"]["saturated"]
+    assert sat_plan["declines"] > sat_plan["plans"], (
+        f"adaptive planned the saturated predicate more often than it "
+        f"declined it: {sat_plan}")
+    for name in list(adaptive["predicates"]):
+        if name != "saturated":
+            assert adaptive["predicates"][name]["fused_launches"] > 0, (
+                f"adaptive never fused {name}")
+    assert adaptive["launches"] < runs[0]["launches"]
+
+    artifact = {
+        "benchmark": "coalescing",
+        "mode": mode,
+        "n_preds": len(preds),
+        "n_detectors": n_detectors,
+        "n_batches": n,
+        "rows_per_batch": ROWS_PER_BATCH,
+        "work_dim": WORK_DIM,
+        "cpu_count": os.cpu_count() or 1,
+        "row_id_multiset_match": True,  # asserted above for every run
+        "runs": runs,
+        "gates": {
+            "adaptive_min_speedup": MIN_ADAPTIVE_SPEEDUP,
+            "enforced": True,
+            "reason": "launch-amortization speedup is core-count "
+                      "independent: enforced in both modes",
+        },
+    }
+    with open(ARTIFACT, "w") as f:
+        json.dump(artifact, f, indent=2)
+        f.write("\n")
+    record("coalescing/artifact", 0.0, os.path.normpath(ARTIFACT))
+
+    assert adaptive["speedup"] >= MIN_ADAPTIVE_SPEEDUP, (
+        f"adaptive coalescing {adaptive['speedup']:.2f}x below the "
+        f"{MIN_ADAPTIVE_SPEEDUP}x gate over coalesce=off"
+    )
+    return artifact
+
+
+if __name__ == "__main__":
+    main(mode=os.environ.get("COALESCE_BENCH_MODE"))

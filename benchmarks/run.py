@@ -18,6 +18,7 @@ import traceback
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (  # noqa: E402
+    bench_coalescing,
     bench_content_routing,
     bench_kernels,
     bench_routing_throughput,
@@ -39,6 +40,7 @@ SUITES = {
     "content": bench_content_routing.main,  # beyond-paper (§2.2 lineage)
     "kernels": bench_kernels.main,          # kernel hot spots
     "routing": bench_routing_throughput.main,  # sharded eddy core scaling
+    "coalescing": bench_coalescing.main,    # adaptive micro-batch fusing
 }
 
 

@@ -18,9 +18,22 @@ Public surface:
     statistics; single-shard is the deterministic default — see core/eddy.py)
   Query / optimize / PhysicalPlan    — §3.1 rule-based plan -> AQP plan
   SimClock / WallClock               — deterministic scheduling evaluation
+  CoalesceConfig / CoalescePlanner   — §5.1 adaptive micro-batch coalescing
+    (fuse queued batches into one launch; executor knob ``coalesce=``)
   vectorized (two_stage_filter / cascade_filter) — TPU-native short-circuit
 """
-from repro.core.batch import RoutingBatch, make_batch  # noqa: F401
+from repro.core.batch import (  # noqa: F401
+    BatchSegment,
+    RoutingBatch,
+    concat,
+    make_batch,
+    split_back,
+)
+from repro.core.coalesce import (  # noqa: F401
+    CoalesceConfig,
+    CoalescePlanner,
+    FusePlan,
+)
 from repro.core.cache import (  # noqa: F401
     ContentHashCache,
     LayeredReuseCache,

@@ -25,7 +25,12 @@ TERMINATION: a shared in-flight tracker (incremented by the pull before a
 batch enters the queue, decremented by the shard that completes it)
 replaces the old unsynchronized ``pull.injected - completed`` read; a shard
 exits when the pull is done AND the tracker reads zero, and the LAST shard
-out closes the output queue — the termination barrier.
+out closes the output queue — the termination barrier.  Micro-batch
+coalescing preserves the invariant by construction: a worker that fuses k
+queued batches into one launch splits the result back into exactly k
+output batches, one per original ``bid`` (core/batch.split_back), so every
+``started()`` batch still produces exactly one completion — the tracker
+never needs to know fusing happened.
 
 WARMUP (§4.1): until every predicate has at least one measurement, the
 first batches are fanned out round-robin so all predicates get measured in
@@ -82,7 +87,9 @@ class InFlightTracker:
     a missed-termination/early-exit hazard with N shards. The pull calls
     ``started()`` BEFORE the batch enters the central queue and shards call
     ``finished()`` when a batch completes, so ``value() == 0`` together
-    with ``pull.done`` is a safe global-quiescence condition."""
+    with ``pull.done`` is a safe global-quiescence condition.  Fused
+    (coalesced) launches split back into one output per original batch, so
+    the per-batch accounting holds unchanged with coalescing enabled."""
 
     def __init__(self) -> None:
         self._n = 0

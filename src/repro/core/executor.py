@@ -21,6 +21,13 @@ backpressure trigger, scale-down retires idle leases so capacity flows to
 the current bottleneck predicate. Reallocation counters are exposed in
 ``stats_snapshot()`` under the reserved ``"_arbiter"`` key.
 
+Micro-batch coalescing (§5.1): ``coalesce="adaptive" | "fixed" | k | off``
+lets workers fuse queued same-predicate batches into one kernel launch,
+amortizing per-launch overhead (see core/coalesce.py and
+core/worker.evaluate_fused). Off by default — the deterministic SimClock
+suites rely on one-launch-per-batch occupancy. Planner counters surface
+in ``stats_snapshot()`` under the reserved ``"_coalesce"`` key.
+
 Kernel cost visibility (§3.3): for the lifetime of a ``run()`` the executor
 registers ``launch.connect_stats_board(self.stats, token=...)``, so every
 Pallas launch a predicate makes reports its per-launch timing into the same
@@ -40,6 +47,7 @@ from typing import Dict, Iterable, Iterator, List, Optional, Sequence
 
 from repro.core.batch import RoutingBatch
 from repro.core.cache import ReuseCache
+from repro.core.coalesce import COALESCE_QUEUE_CAPACITY, CoalesceConfig
 from repro.core.eddy import (
     SHARD_AUTO_MAX, SHARD_AUTO_THRESHOLD_BPS, EddyPull, EddyShardSet,
     InFlightTracker,
@@ -81,6 +89,8 @@ class AQPExecutor:
         shards: Optional[int] = None,
         shard_auto_threshold: float = SHARD_AUTO_THRESHOLD_BPS,
         stats_store: Optional[StatsStore] = None,
+        coalesce=None,
+        worker_queue_capacity: Optional[int] = None,
     ):
         self.predicates = predicates
         self.policy = policy or HydroPolicy()
@@ -133,6 +143,18 @@ class AQPExecutor:
         self.arbiter = arbiter or ResourceArbiter(
             pool=pool, policy=arbiter_policy
         )
+        # Micro-batch coalescing knob (core/coalesce.py): off (default) |
+        # "fixed"/int k | "adaptive". OFF is load-bearing for the
+        # deterministic SimClock suites — their timelines are pinned to
+        # one-launch-per-batch occupancy. When on, worker queues deepen to
+        # COALESCE_QUEUE_CAPACITY by default so there is something to fuse
+        # (an explicit worker_queue_capacity always wins).
+        self.coalesce_config = CoalesceConfig.resolve(coalesce)
+        if worker_queue_capacity is None:
+            worker_queue_capacity = (
+                COALESCE_QUEUE_CAPACITY if self.coalesce_config is not None
+                else 2
+            )
         pred_devices = {
             p.name: tuple((devices or {}).get(p.name, (p.resource,)))
             for p in predicates
@@ -155,6 +177,8 @@ class AQPExecutor:
                     arbiter=self.arbiter,
                     drain_threshold=drain_threshold,
                     launch_token=self._launch_token,
+                    coalesce=self.coalesce_config,
+                    worker_queue_capacity=worker_queue_capacity,
                 )
         except BaseException:
             # don't poison a shared arbiter with half a registration: the
@@ -289,6 +313,15 @@ class AQPExecutor:
             "circulations": r.circulations if r is not None else 0,
             "completed": r.completed if r is not None else 0,
         }
+        if self.coalesce_config is not None:
+            snap["_coalesce"] = {
+                "mode": self.coalesce_config.mode,
+                **{
+                    name: lam.coalesce_planner.counters()
+                    for name, lam in self.laminars.items()
+                    if lam.coalesce_planner is not None
+                },
+            }
         return snap
 
     @property

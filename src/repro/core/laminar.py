@@ -30,8 +30,9 @@ from typing import List, Optional, Sequence
 
 from repro.core.batch import RoutingBatch
 from repro.core.cache import ReuseCache
+from repro.core.coalesce import CoalesceConfig, CoalescePlanner
 from repro.core.policies import LaminarPolicy, RoundRobin
-from repro.core.queues import CentralQueue
+from repro.core.queues import BoundedQueue, CentralQueue
 from repro.core.resources import DRAIN_THRESHOLD_S, ResourceArbiter
 from repro.core.simclock import SimClock
 from repro.core.stats import StatsBoard
@@ -65,6 +66,8 @@ class LaminarRouter:
         arbiter: Optional[ResourceArbiter] = None,
         drain_threshold: Optional[float] = DRAIN_THRESHOLD_S,
         launch_token=None,
+        coalesce: Optional[CoalesceConfig] = None,
+        worker_queue_capacity: int = 2,
     ):
         self.pred = pred
         self.stats = stats
@@ -73,6 +76,15 @@ class LaminarRouter:
         self.max_workers = max(1, max_workers)
         self.arbiter = arbiter or ResourceArbiter()
         self.retirements = 0
+        # One planner per predicate, SHARED by all its workers: the fused
+        # launches any worker records refine the decomposition every other
+        # worker's fuse target reads. None == the pre-coalescing loop.
+        self.coalesce_planner = (
+            CoalescePlanner(pred, stats[pred.name], coalesce,
+                            wall_clock=not isinstance(clock, SimClock))
+            if coalesce is not None else None
+        )
+        self._worker_queue_capacity = max(1, worker_queue_capacity)
         if isinstance(clock, SimClock):
             # wall-clock queue idleness is meaningless in virtual time and
             # would make the deterministic timelines depend on real thread
@@ -97,6 +109,8 @@ class LaminarRouter:
                 idle_timeout=drain_threshold,
                 on_idle=self._on_worker_idle,
                 launch_token=launch_token,
+                coalesce=self.coalesce_planner,
+                queue=BoundedQueue(self._worker_queue_capacity),
             )
 
         # GREEDY allocation of worker contexts (lazy until first batch),

@@ -7,6 +7,15 @@ this repo is clock-agnostic: executors take a ``Clock``, and ``SimClock``
 advances virtual time per (worker, batch) from the predicates' cost models —
 making the paper's timelines exactly reproducible and assertable in tests.
 ``WallClock`` is the production clock.
+
+MICRO-BATCH COALESCING under SimClock: a fused launch is ONE
+``occupy_shared`` call — ``ready`` is the fused batch's ``sim_ready``
+(the max over its constituents, i.e. the last arrival) and ``cost`` is
+the cost model evaluated once over the summed computed rows, so an affine
+model pays one fixed launch term plus the summed per-row terms.  Every
+split output inherits the single fused finish as its ``sim_ready``.  The
+deterministic suites keep coalescing OFF (executor default): their pinned
+timelines assume one launch per batch.
 """
 from __future__ import annotations
 

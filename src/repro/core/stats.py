@@ -14,12 +14,32 @@ policies) fold the stripes into a merged estimate (tickets/wins summed,
 cost = batch-weighted mean of the stripe EMAs). ``shards=1`` (the default,
 and always the case under SimClock) keeps the original single-entry
 behavior bit-for-bit.
+
+LAUNCH-COST DECOMPOSITION (micro-batch coalescing, GRACEFUL-style): each
+entry additionally keeps EMA moments of per-LAUNCH ``(computed_rows,
+seconds)`` samples and fits ``seconds ~= fixed + marginal * rows`` online
+(one-variable least squares over the EMA moments).  ``launch_overhead()``
+exposes the fitted fixed term and ``marginal_cost()`` the per-row slope —
+the evidence the adaptive CoalescePlanner (core/coalesce.py) uses to pick
+the row count where launch amortization flattens.  Samples are recorded
+against COMPUTED rows (cache hits excluded): the decomposition models the
+kernel launch, not the probe.  ``record_fused_eval`` records one fused
+launch while crediting tickets/wins per original segment, so the lottery
+selectivity estimator sees exactly the per-batch history the uncoalesced
+path would have produced.
 """
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence, Tuple
+
+# Launch-decomposition fit gates: at least this many per-launch samples,
+# with row-count variance above the (relative) floor — a single repeated
+# batch size cannot identify a slope, so the fit stays None until fused
+# or heterogeneous launches provide spread.
+LAUNCH_FIT_MIN_SAMPLES = 4
+LAUNCH_FIT_MIN_REL_VAR = 1e-6
 
 
 @dataclass
@@ -53,17 +73,53 @@ class PredicateStats:
     bucket_tickets: Dict[int, int] = field(default_factory=dict)
     bucket_wins: Dict[int, int] = field(default_factory=dict)
 
+    # coalescing observability: launches counts kernel-launch-level samples
+    # (a fused launch counts ONCE); fused_* count only launches that fused
+    # >= 2 batches and the original batches they covered
+    launches: int = 0
+    fused_launches: int = 0
+    fused_batches: int = 0
+    coalesced_rows: int = 0
+
+    # launch-cost decomposition moments: EMAs of rows, seconds, rows^2 and
+    # rows*seconds over per-launch samples (see module docstring)
+    lc_rows: Ema = field(default_factory=lambda: Ema(0.2))
+    lc_secs: Ema = field(default_factory=lambda: Ema(0.2))
+    lc_rows2: Ema = field(default_factory=lambda: Ema(0.2))
+    lc_rowsecs: Ema = field(default_factory=lambda: Ema(0.2))
+
     _lock: threading.Lock = field(default_factory=threading.Lock)
 
     # ------------------------- recording ------------------------- #
+    def _note_launch_locked(self, computed_rows: int, seconds: float) -> None:
+        """One per-launch decomposition sample (caller holds the lock).
+
+        ``computed_rows == 0`` means no kernel ran (full cache hit): there
+        is no launch to decompose, so the sample is skipped."""
+        if computed_rows <= 0:
+            return
+        self.launches += 1
+        r = float(computed_rows)
+        self.lc_rows.update(r)
+        self.lc_secs.update(seconds)
+        self.lc_rows2.update(r * r)
+        self.lc_rowsecs.update(r * seconds)
+
     def record_eval(self, rows_in: int, rows_out: int, seconds: float,
-                    bucket: Optional[int] = None) -> None:
+                    bucket: Optional[int] = None,
+                    computed_rows: Optional[int] = None) -> None:
+        """One uncoalesced evaluation. ``computed_rows`` (defaulting to
+        ``rows_in``) is the number of rows the launch actually computed —
+        cache hits excluded — and feeds the launch-cost decomposition."""
         with self._lock:
             self.batches += 1
             self.tickets += rows_in
             self.wins += rows_in - rows_out
             if rows_in > 0:
                 self.cost_per_row.update(seconds / rows_in)
+            self._note_launch_locked(
+                rows_in if computed_rows is None else computed_rows, seconds
+            )
             if bucket is not None:
                 self.bucket_tickets[bucket] = (
                     self.bucket_tickets.get(bucket, 0) + rows_in
@@ -71,6 +127,45 @@ class PredicateStats:
                 self.bucket_wins[bucket] = (
                     self.bucket_wins.get(bucket, 0) + rows_in - rows_out
                 )
+
+    def record_fused_eval(
+        self,
+        segments: Sequence[Tuple[int, int, Optional[int]]],
+        seconds: float,
+        computed_rows: Optional[int] = None,
+    ) -> None:
+        """One FUSED launch covering ``segments`` of original batches.
+
+        ``segments`` is ``[(rows_in, rows_out, bucket), ...]`` per original
+        batch: tickets/wins (global and per content bucket) are credited
+        per segment — identical to what per-batch ``record_eval`` calls
+        would have accumulated — while the cost EMA and the decomposition
+        see ONE launch over the summed rows, so fusing never drags
+        ``cost_per_row`` up by charging the full fused launch to each
+        small batch."""
+        with self._lock:
+            total_in = sum(s[0] for s in segments)
+            total_out = sum(s[1] for s in segments)
+            self.batches += len(segments)
+            self.tickets += total_in
+            self.wins += total_in - total_out
+            if total_in > 0:
+                self.cost_per_row.update(seconds / total_in)
+            self._note_launch_locked(
+                total_in if computed_rows is None else computed_rows, seconds
+            )
+            if len(segments) > 1:
+                self.fused_launches += 1
+                self.fused_batches += len(segments)
+                self.coalesced_rows += total_in
+            for rows_in, rows_out, bucket in segments:
+                if bucket is not None:
+                    self.bucket_tickets[bucket] = (
+                        self.bucket_tickets.get(bucket, 0) + rows_in
+                    )
+                    self.bucket_wins[bucket] = (
+                        self.bucket_wins.get(bucket, 0) + rows_in - rows_out
+                    )
 
     def record_cache(self, probes: int, hits: int) -> None:
         with self._lock:
@@ -116,6 +211,30 @@ class PredicateStats:
                 return 0.0
             return self.cache_hits / self.cache_probes
 
+    def launch_decomposition(
+        self, min_samples: int = LAUNCH_FIT_MIN_SAMPLES,
+    ) -> Optional[Tuple[float, float]]:
+        """Fitted ``(fixed_seconds, marginal_seconds_per_row)`` or None.
+
+        One-variable least squares over the EMA moments of per-launch
+        ``(rows, seconds)`` samples: ``marginal = cov(r, s) / var(r)``,
+        ``fixed = mean(s) - marginal * mean(r)``.  Returns None until
+        ``min_samples`` launches landed AND the observed row counts have
+        enough spread to identify a slope (all-identical batch sizes
+        cannot); both terms are clamped non-negative — estimator noise can
+        produce a slightly negative intercept, which would otherwise make
+        the planner chase negative overhead."""
+        with self._lock:
+            if self.launches < min_samples:
+                return None
+            r, s = self.lc_rows.get(), self.lc_secs.get()
+            var = self.lc_rows2.get() - r * r
+            if var <= LAUNCH_FIT_MIN_REL_VAR * max(r * r, 1.0):
+                return None
+            marginal = (self.lc_rowsecs.get() - r * s) / var
+            fixed = s - marginal * r
+            return max(fixed, 0.0), max(marginal, 0.0)
+
     def score(self, bucket: Optional[int] = None,
               resolution: Optional[float] = None) -> float:
         """Classic rank: cost / (1 - selectivity); lower runs first.
@@ -136,6 +255,9 @@ class PredicateStats:
             "score": self.score(),
             "cache_hit_rate": self.cache_hit_rate(),
             "batches": self.batches,
+            "launches": self.launches,
+            "fused_launches": self.fused_launches,
+            "fused_batches": self.fused_batches,
         }
 
 
@@ -164,8 +286,19 @@ class ShardedPredicateStats:
 
     # ------------------------- recording ------------------------- #
     def record_eval(self, rows_in: int, rows_out: int, seconds: float,
-                    bucket: Optional[int] = None) -> None:
-        self._stripe().record_eval(rows_in, rows_out, seconds, bucket=bucket)
+                    bucket: Optional[int] = None,
+                    computed_rows: Optional[int] = None) -> None:
+        self._stripe().record_eval(rows_in, rows_out, seconds, bucket=bucket,
+                                   computed_rows=computed_rows)
+
+    def record_fused_eval(
+        self,
+        segments: Sequence[Tuple[int, int, Optional[int]]],
+        seconds: float,
+        computed_rows: Optional[int] = None,
+    ) -> None:
+        self._stripe().record_fused_eval(segments, seconds,
+                                         computed_rows=computed_rows)
 
     def record_cache(self, probes: int, hits: int) -> None:
         self._stripe().record_cache(probes, hits)
@@ -186,6 +319,53 @@ class ShardedPredicateStats:
     @property
     def wins(self) -> int:
         return sum(s.wins for s in self.stripes)
+
+    @property
+    def launches(self) -> int:
+        return sum(s.launches for s in self.stripes)
+
+    @property
+    def fused_launches(self) -> int:
+        return sum(s.fused_launches for s in self.stripes)
+
+    @property
+    def fused_batches(self) -> int:
+        return sum(s.fused_batches for s in self.stripes)
+
+    @property
+    def coalesced_rows(self) -> int:
+        return sum(s.coalesced_rows for s in self.stripes)
+
+    def launch_decomposition(
+        self, min_samples: int = LAUNCH_FIT_MIN_SAMPLES,
+    ) -> Optional[Tuple[float, float]]:
+        """Launch-weighted fold of the per-stripe moment EMAs, fitted once.
+
+        Folding the MOMENTS (not the per-stripe fits) keeps a stripe with
+        too little spread from vetoing the merged estimate: the variance
+        that identifies the slope may only exist ACROSS stripes."""
+        num_r = num_s = num_r2 = num_rs = den = 0.0
+        total = 0
+        for s in self.stripes:
+            with s._lock:
+                if s.launches == 0:
+                    continue
+                w = s.launches
+                total += w
+                num_r += s.lc_rows.get() * w
+                num_s += s.lc_secs.get() * w
+                num_r2 += s.lc_rows2.get() * w
+                num_rs += s.lc_rowsecs.get() * w
+                den += w
+        if total < min_samples or den == 0:
+            return None
+        r, sec = num_r / den, num_s / den
+        var = num_r2 / den - r * r
+        if var <= LAUNCH_FIT_MIN_REL_VAR * max(r * r, 1.0):
+            return None
+        marginal = (num_rs / den - r * sec) / var
+        fixed = sec - marginal * r
+        return max(fixed, 0.0), max(marginal, 0.0)
 
     def cost(self, default: float = 1e-3) -> float:
         num = den = 0.0
@@ -233,6 +413,9 @@ class ShardedPredicateStats:
             "score": self.score(),
             "cache_hit_rate": self.cache_hit_rate(),
             "batches": self.batches,
+            "launches": self.launches,
+            "fused_launches": self.fused_launches,
+            "fused_batches": self.fused_batches,
         }
 
 

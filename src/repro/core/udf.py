@@ -27,6 +27,24 @@ def bucket_rows(n: int, *, minimum: int = 1) -> int:
     return b
 
 
+def pad_rows(v: np.ndarray, target: int) -> np.ndarray:
+    """Pad ``v`` to ``target`` rows by repeating its first row (edge fill).
+
+    Single ``np.empty`` allocation + two fills — the old
+    ``np.concatenate([v, np.repeat(v[:1], ...)])`` allocated the repeat
+    block AND the concatenation result on every bucketed launch.  No-copy
+    fast path when ``v`` is already at ``target`` rows."""
+    rows = v.shape[0]
+    if rows == target:
+        return v
+    if rows > target:
+        raise ValueError(f"cannot pad {rows} rows down to {target}")
+    out = np.empty((target,) + v.shape[1:], v.dtype)
+    out[:rows] = v
+    out[rows:] = v[:1]  # broadcast edge fill, no intermediate repeat copy
+    return out
+
+
 @dataclass
 class UDF:
     """A (possibly expensive) ML function over batch columns.
@@ -103,10 +121,7 @@ class UDF:
         else:
             b = bucket_rows(rows)
             if b != rows:
-                cols = {
-                    c: np.concatenate([v, np.repeat(v[:1], b - rows, axis=0)])
-                    for c, v in cols.items()
-                }
+                cols = {c: pad_rows(v, b) for c, v in cols.items()}
             out = np.asarray(self.fn(cols))[:rows]
         if out.ndim:
             self._out_spec = (out.dtype, out.shape[1:])

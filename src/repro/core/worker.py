@@ -7,6 +7,23 @@ materialization -> reinsert into the central queue. Timing goes through the
 Clock abstraction so the identical code path runs wall-clock (production)
 or simulated (deterministic scheduling benchmarks).
 
+MICRO-BATCH COALESCING (§5.1 utilization): when the context holds a
+``CoalescePlanner`` (core/coalesce.py), a dequeue may drain additional
+queued batches — non-blocking first, then waiting up to the plan's latency
+budget — and evaluate them as ONE fused launch through the identical
+cache-probe -> bucketed-launch -> mask pipeline (``evaluate_fused``).  The
+fused mask is split back at the recorded segment boundaries
+(``batch.split_back``), so each output batch is bit-identical to what the
+uncoalesced path would have produced: same bid, visited set, surviving
+row multiset, circulation order, and one output per input batch (the
+eddy in-flight tracker counts split outputs exactly like unfused ones).
+Statistics credit tickets/wins per original segment but cost per fused
+launch, and the per-launch (rows, seconds) sample feeds the fixed+marginal
+decomposition the adaptive planner learns from.  The planner DECLINES to
+fuse (plan() -> None) when it has no launch-overhead evidence or the
+predicate is already amortized — then this module is byte-for-byte the
+old single-batch loop.
+
 Elastic lifecycle (§5.2): a worker holds a *lease* on a device slot (see
 core/resources.py). When its input queue has been idle past
 ``idle_timeout`` seconds it offers to retire via ``on_idle``; if the
@@ -24,18 +41,83 @@ from __future__ import annotations
 import threading
 import time
 import traceback
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass, field, replace as _replace
+from typing import Callable, List, Optional
 
 import numpy as np
 
-from repro.core.batch import RoutingBatch
+from repro.core.batch import RoutingBatch, concat, split_back
 from repro.core.cache import ReuseCache
+from repro.core.coalesce import CoalescePlanner
 from repro.core.queues import BoundedQueue, CentralQueue, ClosedError
-from repro.core.simclock import SimClock, WallClock
+from repro.core.simclock import SimClock
 from repro.core.stats import StatsBoard
 from repro.core.udf import Predicate
 from repro.kernels import launch as kernel_launch
+
+
+def _evaluate_with_cache(pred, batch, data, *, cache, stats):
+    """Cache probe -> compute misses -> vectorized hit/miss merge.
+
+    Returns ``(outputs, wall_seconds, computed_rows, compute_data)`` where
+    ``computed_rows`` is how many rows actually launched (0 on a full
+    cache hit) and ``compute_data`` the column dict that was computed
+    (None when nothing was) — the compute-only proxy load, so the
+    proxy->seconds rate is never fed a full batch's load against a
+    near-zero cached wall time."""
+    rows = batch.rows
+    if cache is not None and pred.cacheable:
+        # batch-aware probe: a layered cache digests the row payloads so
+        # content-identical rows hit even under fresh row ids; the id-keyed
+        # base cache ignores the payload argument
+        hits, vals = cache.probe_batch(pred.udf.name, batch.row_ids, data)
+        stats[pred.name].record_cache(rows, int(hits.sum()))
+        if hits.any():
+            miss = ~hits
+            computed_rows = int(miss.sum())
+            hit_vals = np.stack(
+                [np.asarray(vals[i]) for i in np.nonzero(hits)[0]]
+            )
+            if computed_rows:
+                sub = {c: v[miss] for c, v in data.items()}
+                t0 = time.perf_counter()
+                sub_out = np.asarray(pred.evaluate_outputs(sub))
+                wall = time.perf_counter() - t0
+                cache.put_batch(pred.udf.name, batch.row_ids[miss], sub,
+                                sub_out)
+                # fancy-index scatter instead of the old per-index Python
+                # loop + full-batch np.stack; dtype promotion matches what
+                # stacking mixed hit/computed values used to produce
+                outputs = np.empty(
+                    (rows,) + sub_out.shape[1:],
+                    np.promote_types(sub_out.dtype, hit_vals.dtype),
+                )
+                outputs[miss] = sub_out
+                outputs[hits] = hit_vals
+                return outputs, wall, computed_rows, sub
+            outputs = np.empty((rows,) + hit_vals.shape[1:], hit_vals.dtype)
+            outputs[hits] = hit_vals
+            return outputs, 0.0, 0, None
+        t0 = time.perf_counter()
+        outputs = pred.evaluate_outputs(data)
+        wall = time.perf_counter() - t0
+        cache.put_batch(pred.udf.name, batch.row_ids, data, outputs)
+        return outputs, wall, rows, data
+    t0 = time.perf_counter()
+    outputs = pred.evaluate_outputs(data)
+    wall = time.perf_counter() - t0
+    return outputs, wall, rows, data
+
+
+def _sim_cost(pred, computed_rows: int, data, wall: float) -> float:
+    if pred.udf.cost_model is None:
+        return wall
+    try:
+        # data-aware cost models see the batch columns (UC4: LLM
+        # cost proportional to text length, not just row count)
+        return pred.udf.cost_model(computed_rows, data)
+    except TypeError:
+        return pred.udf.cost_model(computed_rows)
 
 
 def evaluate_predicate(
@@ -55,53 +137,13 @@ def evaluate_predicate(
         return batch.mark_visited(pred.name)
 
     data = {c: batch.data[c] for c in pred.udf.columns}
-    computed_rows = rows
-
-    if cache is not None and pred.cacheable:
-        # batch-aware probe: a layered cache digests the row payloads so
-        # content-identical rows hit even under fresh row ids; the id-keyed
-        # base cache ignores the payload argument
-        hits, vals = cache.probe_batch(pred.udf.name, batch.row_ids, data)
-        stats[pred.name].record_cache(rows, int(hits.sum()))
-        if hits.any():
-            miss = ~hits
-            computed_rows = int(miss.sum())
-            outputs = [None] * rows
-            for i in np.nonzero(hits)[0]:
-                outputs[i] = vals[i]
-            if computed_rows:
-                sub = {c: v[miss] for c, v in data.items()}
-                t0 = time.perf_counter()
-                sub_out = pred.evaluate_outputs(sub)
-                wall = time.perf_counter() - t0
-                cache.put_batch(pred.udf.name, batch.row_ids[miss], sub,
-                                sub_out)
-                for j, i in enumerate(np.nonzero(miss)[0]):
-                    outputs[i] = sub_out[j]
-            else:
-                wall = 0.0
-            outputs = np.stack([np.asarray(o) for o in outputs])
-        else:
-            t0 = time.perf_counter()
-            outputs = pred.evaluate_outputs(data)
-            wall = time.perf_counter() - t0
-            cache.put_batch(pred.udf.name, batch.row_ids, data, outputs)
-    else:
-        t0 = time.perf_counter()
-        outputs = pred.evaluate_outputs(data)
-        wall = time.perf_counter() - t0
+    outputs, wall, computed_rows, compute_data = _evaluate_with_cache(
+        pred, batch, data, cache=cache, stats=stats
+    )
 
     finish = None
     if isinstance(clock, SimClock):
-        if pred.udf.cost_model is not None:
-            try:
-                # data-aware cost models see the batch columns (UC4: LLM
-                # cost proportional to text length, not just row count)
-                cost = pred.udf.cost_model(computed_rows, data)
-            except TypeError:
-                cost = pred.udf.cost_model(computed_rows)
-        else:
-            cost = wall
+        cost = _sim_cost(pred, computed_rows, data, wall)
         finish = clock.occupy_shared(
             worker_id, device_group, cost, serial_fraction, ready=batch.sim_ready
         )
@@ -112,14 +154,71 @@ def evaluate_predicate(
     mask = pred.mask_from_outputs(outputs)
     out_batch = batch.filter(mask).mark_visited(pred.name)
     if finish is not None:
-        from dataclasses import replace as _replace
-
         out_batch = _replace(out_batch, sim_ready=finish)
     stats[pred.name].record_eval(
-        rows, out_batch.rows, seconds, bucket=stats.bucket_of(batch)
+        rows, out_batch.rows, seconds, bucket=stats.bucket_of(batch),
+        computed_rows=computed_rows,
     )
-    stats.note_proxy_rate(pred.udf.proxy(data), seconds)
+    # proxy->seconds rate: compute-only load over compute-only time. The
+    # old call fed the FULL batch's proxy load even when most rows were
+    # cache hits and wall ~= 0, corrupting the rate (and risking
+    # div-by-near-zero on full hits) — full-hit evaluations are skipped.
+    if computed_rows and compute_data is not None:
+        stats.note_proxy_rate(pred.udf.proxy(compute_data), seconds)
     return out_batch
+
+
+def evaluate_fused(
+    pred: Predicate,
+    batches: List[RoutingBatch],
+    *,
+    stats: StatsBoard,
+    cache: Optional[ReuseCache],
+    clock,
+    worker_id: str,
+    device_group: str,
+    serial_fraction: float = 0.0,
+) -> List[RoutingBatch]:
+    """Evaluate ``batches`` as ONE fused launch; returns per-bid outputs.
+
+    The fused batch goes through the identical cache-probe ->
+    bucketed-launch -> mask pipeline as a single batch, then the mask is
+    split at the segment boundaries so every output is bit-identical to
+    individual evaluation (see the coalescing contract in core/batch.py).
+    Under SimClock the fused occupancy is ONE launch: cost_model(total
+    computed rows) = one fixed launch term + summed per-row terms, started
+    at the LAST constituent's virtual arrival; every split output inherits
+    the single fused finish as its ``sim_ready``."""
+    assert batches and all(b.rows > 0 for b in batches)
+    fused, segments = concat(batches)
+    data = {c: fused.data[c] for c in pred.udf.columns}
+    outputs, wall, computed_rows, compute_data = _evaluate_with_cache(
+        pred, fused, data, cache=cache, stats=stats
+    )
+
+    finish = None
+    if isinstance(clock, SimClock):
+        cost = _sim_cost(pred, computed_rows, data, wall)
+        finish = clock.occupy_shared(
+            worker_id, device_group, cost, serial_fraction, ready=fused.sim_ready
+        )
+        seconds = cost
+    else:
+        seconds = wall
+
+    mask = pred.mask_from_outputs(outputs)
+    outs = split_back(segments, mask, visit=pred.name, sim_ready=finish)
+    stats[pred.name].record_fused_eval(
+        [
+            (b.rows, o.rows, stats.bucket_of(b))
+            for b, o in zip(batches, outs)
+        ],
+        seconds,
+        computed_rows=computed_rows,
+    )
+    if computed_rows and compute_data is not None:
+        stats.note_proxy_rate(pred.udf.proxy(compute_data), seconds)
+    return outs
 
 
 @dataclass
@@ -129,7 +228,9 @@ class WorkerContext:
     ``index`` is the context's position in its predicate's greedy
     allocation (stable activation order); ``idle_timeout``/``on_idle``
     implement the §5.2 scale-down handshake; ``launch_token`` tags the
-    worker thread for per-executor kernel-launch attribution."""
+    worker thread for per-executor kernel-launch attribution; ``coalesce``
+    (a per-predicate CoalescePlanner shared across the predicate's
+    workers) enables micro-batch fusing on the dequeue path."""
 
     wid: str
     pred: Predicate
@@ -148,6 +249,7 @@ class WorkerContext:
     idle_timeout: Optional[float] = None
     on_idle: Optional[Callable[["WorkerContext"], bool]] = None
     launch_token: Optional[object] = None
+    coalesce: Optional[CoalescePlanner] = None
     # submits in flight (set under the router lock): a pinned worker must
     # not retire, or the in-flight batch would land in a dead queue
     pinned: int = 0
@@ -177,6 +279,71 @@ class WorkerContext:
         self.activate()
         return self.queue.put(batch, timeout)
 
+    # ------------------------- coalescing ------------------------- #
+    def _drain_coalesce(self, first: RoutingBatch) -> List[RoutingBatch]:
+        """Collect the fuse group for this dequeue: ``[first]`` plus up to
+        ``plan.max_batches - 1`` more queued batches, draining
+        non-blocking first and then waiting out the latency budget while
+        still short of ``plan.target_rows``.  A closed queue ends the
+        drain — whatever is in hand still gets evaluated."""
+        planner = self.coalesce
+        if planner is None:
+            return [first]
+        plan = planner.plan(first.rows)
+        if plan is None:
+            return [first]
+        batches, rows = [first], first.rows
+        deadline = None
+        while rows < plan.target_rows and len(batches) < plan.max_batches:
+            got = self.queue.get_many(plan.max_batches - len(batches))
+            if got:
+                batches.extend(got)
+                rows += sum(b.rows for b in got)
+                continue
+            if plan.max_wait_s <= 0:
+                break
+            now = time.monotonic()
+            if deadline is None:
+                deadline = now + plan.max_wait_s
+            remaining = deadline - now
+            if remaining <= 0:
+                break
+            try:
+                batches.append(self.queue.get(timeout=remaining))
+                rows += batches[-1].rows
+            except (TimeoutError, ClosedError):
+                break
+        planner.note_fused(len(batches))
+        return batches
+
+    def _evaluate_group(self, batches: List[RoutingBatch]) -> List[RoutingBatch]:
+        """Evaluate a fuse group, preserving per-batch output order.
+
+        Zero-row batches never launch anything and take the single-batch
+        path (mark-visited only); the non-empty remainder fuses into one
+        launch when there are at least two."""
+        fusable = [b for b in batches if b.rows > 0]
+        if len(fusable) < 2:
+            return [
+                evaluate_predicate(
+                    self.pred, b,
+                    stats=self.stats, cache=self.cache, clock=self.clock,
+                    worker_id=self.wid, device_group=self.device_group,
+                    serial_fraction=self.serial_fraction,
+                )
+                for b in batches
+            ]
+        fused_outs = iter(evaluate_fused(
+            self.pred, fusable,
+            stats=self.stats, cache=self.cache, clock=self.clock,
+            worker_id=self.wid, device_group=self.device_group,
+            serial_fraction=self.serial_fraction,
+        ))
+        return [
+            next(fused_outs) if b.rows > 0 else b.mark_visited(self.pred.name)
+            for b in batches
+        ]
+
     def _run(self) -> None:
         if self.launch_token is not None:
             # thread-affine launch attribution: kernel timing hooks keyed
@@ -197,18 +364,15 @@ class WorkerContext:
             except ClosedError:
                 return
             try:
-                out = evaluate_predicate(
-                    self.pred, batch,
-                    stats=self.stats, cache=self.cache, clock=self.clock,
-                    worker_id=self.wid, device_group=self.device_group,
-                    serial_fraction=self.serial_fraction,
-                )
-                load = self.pred.udf.proxy(
-                    {c: batch.data[c] for c in self.pred.udf.columns}
-                ) if batch.rows else 0.0
-                self.stats.finish_load(self.wid, load)
-                self.batches_done += 1
-                self.central.put_worker(out)
+                batches = self._drain_coalesce(batch)
+                outs = self._evaluate_group(batches)
+                for b, out in zip(batches, outs):
+                    load = self.pred.udf.proxy(
+                        {c: b.data[c] for c in self.pred.udf.columns}
+                    ) if b.rows else 0.0
+                    self.stats.finish_load(self.wid, load)
+                    self.batches_done += 1
+                    self.central.put_worker(out)
             except ClosedError:
                 return
             except Exception as e:  # propagate to the executor

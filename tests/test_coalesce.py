@@ -1,0 +1,594 @@
+"""Micro-batch coalescing: concat/split_back contract, launch-cost
+decomposition, the adaptive planner, and the fused worker path.
+
+The load-bearing property is bit-exactness: fusing k queued batches into
+one launch must be invisible to routing semantics — same bids, same
+visited sets, same surviving row multiset, same per-row mask outcome as
+evaluating each batch alone (core/batch.py's coalescing contract).
+"""
+import threading
+import time
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AQPExecutor, CoalesceConfig, CoalescePlanner, Predicate, ReuseCache,
+    SimClock, UDF, WallClock, concat, make_batch, split_back,
+)
+from repro.core.batch import BatchSegment
+from repro.core.coalesce import COALESCE_QUEUE_CAPACITY
+from repro.core.queues import BoundedQueue
+from repro.core.stats import (
+    LAUNCH_FIT_MIN_SAMPLES, PredicateStats, ShardedPredicateStats, StatsBoard,
+)
+from repro.core.udf import bucket_rows, pad_rows
+from repro.core.worker import (
+    _evaluate_with_cache, evaluate_fused, evaluate_predicate,
+)
+
+
+def _pred(name="p", thresh=0.0, fixed=0.0, marginal=0.0, sleep=0.0):
+    def fn(cols):
+        if sleep:
+            time.sleep(sleep)
+        return cols["x"]
+
+    cost_model = None
+    if fixed or marginal:
+        cost_model = lambda r: fixed + marginal * r  # noqa: E731
+    udf = UDF(name, fn, columns=("x",), cost_model=cost_model)
+    return Predicate(name, udf, compare=lambda o: o > thresh)
+
+
+def _batches(rng, n, rows_lo=1, rows_hi=12):
+    out = []
+    rid = 0
+    for i in range(n):
+        rows = int(rng.integers(rows_lo, rows_hi + 1))
+        out.append(make_batch(
+            {"x": rng.normal(size=rows)},
+            row_ids=np.arange(rid, rid + rows),
+            visited=frozenset(rng.choice(["a", "b"], size=2)),
+            sim_ready=float(rng.uniform(0, 5)),
+        ))
+        rid += rows
+    return out
+
+
+# --------------------------- concat / split_back --------------------------- #
+class TestConcatSplitBack:
+    def test_fused_equals_individual(self, rng):
+        """The contract itself: split_back(mask(concat(bs))) is bit-identical
+        to evaluating every batch alone (bid, visited, row ids, data)."""
+        batches = _batches(rng, 6)
+        fused, segs = concat(batches)
+        mask = fused.data["x"] > 0.0
+        outs = split_back(segs, mask, visit="p")
+        assert len(outs) == len(batches)
+        for b, out in zip(batches, outs):
+            solo = b.filter(b.data["x"] > 0.0).mark_visited("p")
+            assert out.bid == b.bid == solo.bid
+            assert out.visited == solo.visited
+            assert out.warmup == solo.warmup
+            assert out.created_at == solo.created_at
+            np.testing.assert_array_equal(out.row_ids, solo.row_ids)
+            np.testing.assert_array_equal(out.data["x"], solo.data["x"])
+
+    def test_row_id_multiset_preserved(self, rng):
+        batches = _batches(rng, 5)
+        fused, segs = concat(batches)
+        mask = np.ones(fused.rows, bool)
+        outs = split_back(segs, mask)
+        assert Counter(
+            int(r) for o in outs for r in o.row_ids
+        ) == Counter(int(r) for b in batches for r in b.row_ids)
+
+    def test_fused_metadata(self):
+        a = make_batch({"x": np.ones(2)}, row_ids=np.arange(2),
+                       visited=frozenset({"a", "b"}), warmup=True,
+                       created_at=1.0, sim_ready=3.0)
+        b = make_batch({"x": np.ones(3)}, row_ids=np.arange(2, 5),
+                       visited=frozenset({"b", "c"}), warmup=False,
+                       created_at=0.5, sim_ready=7.0)
+        fused, segs = concat([a, b])
+        assert fused.rows == 5
+        assert fused.visited == frozenset({"b"})   # intersection
+        assert fused.warmup is False               # all()
+        assert fused.created_at == 0.5             # earliest
+        assert fused.sim_ready == 7.0              # last arrival
+        assert [(s.start, s.stop) for s in segs] == [(0, 2), (2, 5)]
+
+    def test_single_batch_passthrough(self):
+        b = make_batch({"x": np.arange(3.0)})
+        fused, segs = concat([b])
+        assert fused is b
+        assert segs == [BatchSegment(b, 0, 3)]
+
+    def test_schema_mismatch_raises(self):
+        a = make_batch({"x": np.ones(2)})
+        b = make_batch({"y": np.ones(2)})
+        with pytest.raises(ValueError, match="schemas"):
+            concat([a, b])
+
+    def test_empty_input_raises(self):
+        with pytest.raises(ValueError):
+            concat([])
+
+    def test_mask_length_mismatch_raises(self):
+        b = make_batch({"x": np.ones(4)})
+        _, segs = concat([b])
+        with pytest.raises(ValueError, match="mask"):
+            split_back(segs, np.ones(3, bool))
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - requirements-dev only
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def fuse_case(draw):
+        n = draw(st.integers(1, 6))
+        rows = [draw(st.integers(1, 9)) for _ in range(n)]
+        seed = draw(st.integers(0, 2**16))
+        thresh = draw(st.floats(-1.5, 1.5))
+        return rows, seed, thresh
+
+    @given(fuse_case())
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_property_fused_mask_outcome(case):
+        """For ANY batch sizes/payloads/threshold: fused evaluation + split
+        preserves the row-id multiset, visited sets, and every row's
+        individual mask outcome."""
+        rows, seed, thresh = case
+        rng = np.random.default_rng(seed)
+        rid = 0
+        batches = []
+        for r in rows:
+            batches.append(make_batch(
+                {"x": rng.normal(size=r)}, row_ids=np.arange(rid, rid + r),
+                visited=frozenset(
+                    v for v in ("a", "b") if rng.integers(2)
+                ),
+            ))
+            rid += r
+        fused, segs = concat(batches)
+        mask = fused.data["x"] > thresh
+        outs = split_back(segs, mask, visit="p")
+        solos = [b.filter(b.data["x"] > thresh).mark_visited("p")
+                 for b in batches]
+        assert Counter(
+            int(r) for o in outs for r in o.row_ids
+        ) == Counter(int(r) for s in solos for r in s.row_ids)
+        for out, solo in zip(outs, solos):
+            assert out.visited == solo.visited
+            np.testing.assert_array_equal(out.row_ids, solo.row_ids)
+            np.testing.assert_array_equal(out.data["x"], solo.data["x"])
+
+
+# ----------------------- vectorized cache hit/miss merge ------------------- #
+class TestCacheMerge:
+    def test_interleaved_hits_large_batch(self):
+        """Regression for the vectorized scatter merge: ~1k rows with
+        interleaved cache hits must reproduce cached values on hit rows and
+        computed values on miss rows, including trailing output dims."""
+        rows = 1000
+        x = np.arange(rows, dtype=np.float64)
+        batch = make_batch({"x": x}, row_ids=np.arange(rows))
+        # (rows, 3) outputs exercise the trailing-shape scatter
+        fn_calls = []
+
+        def fn(cols):
+            fn_calls.append(cols["x"].shape[0])
+            return np.stack([cols["x"], cols["x"] * 2, cols["x"] * 3], axis=1)
+
+        udf = UDF("v", fn, columns=("x",))
+        pred = Predicate("v", udf, compare=lambda o: o[:, 0] >= 0)
+        cache = ReuseCache()
+        even = np.arange(0, rows, 2)
+        # cached values carry a sentinel offset so hits are distinguishable
+        # from recomputation in the merged output
+        cache.put("v", even, np.stack(
+            [even + 0.5, even * 2.0, even * 3.0], axis=1))
+        stats = StatsBoard(["v"])
+        data = {"x": x}
+        outputs, wall, computed, compute_data = _evaluate_with_cache(
+            pred, batch, data, cache=cache, stats=stats)
+        assert outputs.shape == (rows, 3)
+        assert computed == rows // 2
+        # only the misses launched (padded to their power-of-two bucket)
+        assert fn_calls == [bucket_rows(rows // 2)]
+        np.testing.assert_array_equal(outputs[0::2, 0], even + 0.5)  # hits
+        odd = np.arange(1, rows, 2)
+        np.testing.assert_array_equal(outputs[1::2, 0], odd)         # computed
+        np.testing.assert_array_equal(outputs[:, 1], x * 2)
+        np.testing.assert_array_equal(compute_data["x"], x[1::2])
+
+    def test_full_hit_no_compute(self):
+        x = np.arange(8.0)
+        batch = make_batch({"x": x}, row_ids=np.arange(8))
+        udf = UDF("v", lambda c: 1 / 0, columns=("x",))  # must never run
+        pred = Predicate("v", udf, compare=lambda o: o > 0)
+        cache = ReuseCache()
+        cache.put("v", np.arange(8), x + 1)
+        stats = StatsBoard(["v"])
+        outputs, wall, computed, compute_data = _evaluate_with_cache(
+            pred, batch, {"x": x}, cache=cache, stats=stats)
+        assert computed == 0 and compute_data is None
+        np.testing.assert_array_equal(outputs, x + 1)
+
+    def test_full_hit_skips_proxy_rate(self):
+        """Proxy-rate regression: a fully cached evaluation has ~zero wall
+        time and must NOT feed the proxy->seconds rate (the old code fed
+        the full batch's load against the near-zero cached wall)."""
+        x = np.arange(8.0)
+        udf = UDF("v", lambda c: c["x"], columns=("x",))
+        pred = Predicate("v", udf, compare=lambda o: o >= 0)
+        cache = ReuseCache()
+        cache.put("v", np.arange(8), x)
+        stats = StatsBoard(["v"])
+        out = evaluate_predicate(
+            pred, make_batch({"x": x}, row_ids=np.arange(8)),
+            stats=stats, cache=cache, clock=WallClock(),
+            worker_id="w", device_group="cpu")
+        assert out.rows == 8
+        assert stats.proxy_rate.value is None  # untouched
+        # a computing evaluation does feed it
+        out = evaluate_predicate(
+            pred, make_batch({"x": x}, row_ids=np.arange(100, 108)),
+            stats=stats, cache=cache, clock=WallClock(),
+            worker_id="w", device_group="cpu")
+        assert stats.proxy_rate.value is not None
+
+    def test_partial_hit_proxy_uses_compute_only_load(self):
+        """With half the rows cached, the recorded load is the MISS half's
+        proxy units (default proxy = input size), not the full batch's."""
+        rows = 64
+        x = np.arange(rows, dtype=float)
+        udf = UDF("v", lambda c: c["x"], columns=("x",))
+        pred = Predicate("v", udf, compare=lambda o: o >= 0)
+        cache = ReuseCache()
+        cache.put("v", np.arange(0, rows, 2), x[0::2])
+        seen = []
+        stats = StatsBoard(["v"])
+        stats.note_proxy_rate, orig = (
+            lambda units, secs: seen.append(units), stats.note_proxy_rate)
+        evaluate_predicate(
+            pred, make_batch({"x": x}, row_ids=np.arange(rows)),
+            stats=stats, cache=cache, clock=WallClock(),
+            worker_id="w", device_group="cpu")
+        assert seen == [rows / 2]
+
+
+# ------------------------------ pad_rows ----------------------------------- #
+class TestPadRows:
+    def test_no_copy_fast_path(self):
+        v = np.arange(8.0)
+        assert pad_rows(v, 8) is v
+
+    def test_edge_fill(self):
+        v = np.arange(6.0).reshape(3, 2)
+        out = pad_rows(v, 5)
+        assert out.shape == (5, 2)
+        np.testing.assert_array_equal(out[:3], v)
+        np.testing.assert_array_equal(out[3], v[0])
+        np.testing.assert_array_equal(out[4], v[0])
+
+    def test_shrink_raises(self):
+        with pytest.raises(ValueError):
+            pad_rows(np.arange(4.0), 2)
+
+
+# ------------------------------ get_many ----------------------------------- #
+class TestGetMany:
+    def test_drains_up_to_limit(self):
+        q = BoundedQueue(8)
+        for i in range(3):
+            q.put(i)
+        assert q.get_many(2) == [0, 1]
+        assert q.get_many(5) == [2]
+        assert q.get_many(5) == []
+        assert q.get_many(0) == []
+
+    def test_drains_closed_queue(self):
+        q = BoundedQueue(8)
+        q.put("a")
+        q.close()
+        assert q.get_many(4) == ["a"]
+        assert q.get_many(4) == []
+
+    def test_wakes_blocked_putter(self):
+        q = BoundedQueue(1)
+        q.put("first")
+        done = threading.Event()
+
+        def putter():
+            q.put("second", timeout=5.0)
+            done.set()
+
+        t = threading.Thread(target=putter)
+        t.start()
+        try:
+            assert q.get_many(1) == ["first"]
+            assert done.wait(5.0)
+            assert q.get_many(1) == ["second"]
+        finally:
+            t.join(5.0)
+
+
+# ----------------------- launch-cost decomposition ------------------------- #
+class TestLaunchDecomposition:
+    def test_fits_affine_cost(self):
+        st_ = PredicateStats("p")
+        for rows in (4, 8, 16, 32, 64, 16, 8, 32):
+            st_.record_eval(rows, rows, 0.01 + 0.001 * rows)
+        fixed, marginal = st_.launch_decomposition()
+        assert fixed == pytest.approx(0.01, rel=0.05)
+        assert marginal == pytest.approx(0.001, rel=0.05)
+
+    def test_none_below_min_samples(self):
+        st_ = PredicateStats("p")
+        for rows in (4, 8, 16):
+            st_.record_eval(rows, rows, 0.01 + 0.001 * rows)
+        assert st_.launch_decomposition(
+            min_samples=LAUNCH_FIT_MIN_SAMPLES) is None
+
+    def test_none_without_row_spread(self):
+        st_ = PredicateStats("p")
+        for _ in range(10):
+            st_.record_eval(8, 8, 0.02)
+        assert st_.launch_decomposition() is None
+
+    def test_cache_hits_excluded(self):
+        st_ = PredicateStats("p")
+        st_.record_eval(100, 100, 1e-6, computed_rows=0)  # full cache hit
+        assert st_.launches == 0
+        st_.record_eval(100, 100, 0.05, computed_rows=50)
+        assert st_.launches == 1
+
+    def test_clamps_negative_intercept(self):
+        st_ = PredicateStats("p")
+        # noisy samples engineered toward a negative intercept
+        for rows, secs in ((2, 0.001), (4, 0.005), (8, 0.011), (16, 0.025)):
+            st_.record_eval(rows, rows, secs)
+        fixed, marginal = st_.launch_decomposition()
+        assert fixed >= 0.0 and marginal >= 0.0
+
+    def test_sharded_cross_stripe_variance(self):
+        """Each stripe sees ONE batch size (zero within-stripe variance);
+        the merged fold must still identify the slope from the spread
+        ACROSS stripes."""
+        sh = ShardedPredicateStats("p", [PredicateStats("p"),
+                                         PredicateStats("p")])
+        for _ in range(4):
+            sh.stripe(0).record_eval(8, 8, 0.01 + 0.001 * 8)
+            sh.stripe(1).record_eval(64, 64, 0.01 + 0.001 * 64)
+        assert sh.stripe(0).launch_decomposition() is None  # no spread
+        fixed, marginal = sh.launch_decomposition()
+        assert fixed == pytest.approx(0.01, rel=1e-6)
+        assert marginal == pytest.approx(0.001, rel=1e-6)
+
+    def test_record_fused_eval_accounting(self):
+        st_ = PredicateStats("p")
+        st_.record_fused_eval([(8, 4, None), (8, 8, None), (4, 0, None)],
+                              0.05)
+        assert st_.batches == 3        # one per original segment
+        assert st_.tickets == 20
+        assert st_.wins == 8
+        assert st_.launches == 1       # ONE launch sample
+        assert st_.fused_launches == 1
+        assert st_.fused_batches == 3
+        assert st_.coalesced_rows == 20
+        assert st_.cost_per_row.value == pytest.approx(0.05 / 20)
+
+
+# ------------------------------- planner ----------------------------------- #
+class TestCoalescePlanner:
+    def test_resolve_spellings(self):
+        assert CoalesceConfig.resolve(None) is None
+        assert CoalesceConfig.resolve(False) is None
+        assert CoalesceConfig.resolve(0) is None
+        assert CoalesceConfig.resolve("off") is None
+        assert CoalesceConfig.resolve("adaptive").mode == "adaptive"
+        assert CoalesceConfig.resolve(True).mode == "adaptive"
+        assert CoalesceConfig.resolve("fixed").mode == "fixed"
+        cfg = CoalesceConfig.resolve(4)
+        assert cfg.mode == "fixed" and cfg.k == 4
+        assert CoalesceConfig.resolve(cfg) is cfg
+        assert CoalesceConfig.resolve(CoalesceConfig(mode="off", k=8)) is None
+        with pytest.raises(ValueError):
+            CoalesceConfig.resolve("bogus")
+        with pytest.raises(ValueError):
+            CoalesceConfig(mode="adaptive", k=1)
+
+    def _planner(self, pred, mode="adaptive", **kw):
+        return CoalescePlanner(
+            pred, PredicateStats(pred.name),
+            CoalesceConfig(mode=mode), **kw)
+
+    def test_seed_from_cost_model(self):
+        pl = self._planner(_pred(fixed=0.01, marginal=0.001))
+        fixed, marginal = pl.estimate()
+        assert fixed == pytest.approx(0.01)
+        assert marginal == pytest.approx(0.001)
+        # target = fixed / (eps * marginal) = 0.01 / (0.25 * 0.001) = 40
+        assert pl.target_rows() in (39, 40)  # fp rounding on the division
+        plan = pl.plan(first_rows=8)
+        assert plan is not None and plan.target_rows in (39, 40)
+        assert pl.plan(first_rows=40) is None        # saturated: decline
+        assert pl.counters()["declines"] == 1
+
+    def test_declines_without_evidence(self):
+        pl = self._planner(_pred())  # no cost model, no samples
+        assert pl.estimate() is None
+        assert pl.plan(first_rows=1) is None
+
+    def test_declines_zero_overhead(self):
+        pl = self._planner(_pred(marginal=0.001))  # fixed == 0
+        assert pl.plan(first_rows=1) is None
+
+    def test_pure_fixed_cost_caps_at_max_rows(self):
+        pl = self._planner(_pred(fixed=0.01))  # marginal == 0
+        assert pl.target_rows() == pl.config.max_rows
+
+    def test_online_fit_overrides_seed(self):
+        pred = _pred(fixed=0.01, marginal=0.001)
+        entry = PredicateStats(pred.name)
+        pl = CoalescePlanner(pred, entry, CoalesceConfig())
+        # observed reality: 10x the seeded overhead
+        for rows in (4, 8, 16, 32, 64, 8):
+            entry.record_eval(rows, rows, 0.1 + 0.001 * rows)
+        fixed, _ = pl.estimate()
+        assert fixed == pytest.approx(0.1, rel=0.05)
+
+    def test_rejects_unusable_cost_model(self):
+        def bad(rows):
+            raise ValueError("data-aware: needs the batch")
+
+        udf = UDF("p", lambda c: c["x"], columns=("x",), cost_model=bad)
+        pl = self._planner(Predicate("p", udf, compare=lambda o: o > 0))
+        assert pl.estimate() is None
+
+    def test_fixed_mode_always_plans(self):
+        pl = self._planner(_pred(), mode="fixed")
+        plan = pl.plan(first_rows=10_000)
+        assert plan is not None and plan.max_batches == pl.config.k
+
+    def test_simclock_forces_zero_wait(self):
+        pl = self._planner(_pred(fixed=0.01, marginal=0.001),
+                           wall_clock=False)
+        assert pl.plan(first_rows=1).max_wait_s == 0.0
+
+
+# ------------------------- fused evaluation -------------------------------- #
+class TestEvaluateFused:
+    def test_simclock_single_launch_occupancy(self):
+        """A fused launch is ONE occupy_shared: starts at the LAST
+        constituent's arrival, costs one fixed term + summed row terms, and
+        every split output inherits the fused finish."""
+        pred = _pred(fixed=0.01, marginal=0.001)
+        clock = SimClock()
+        stats = StatsBoard(["p"])
+        a = make_batch({"x": np.ones(8)}, row_ids=np.arange(8), sim_ready=0.0)
+        b = make_batch({"x": -np.ones(8)}, row_ids=np.arange(8, 16),
+                       sim_ready=5.0)
+        outs = evaluate_fused(
+            pred, [a, b], stats=stats, cache=None, clock=clock,
+            worker_id="w", device_group="cpu")
+        finish = 5.0 + 0.01 + 0.001 * 16   # one launch term, summed rows
+        assert [o.sim_ready for o in outs] == [finish, finish]
+        assert [o.rows for o in outs] == [8, 0]
+        assert outs[0].bid == a.bid and outs[1].bid == b.bid
+        entry = stats["p"]
+        assert entry.launches == 1 and entry.fused_launches == 1
+        assert entry.tickets == 16 and entry.wins == 8
+
+    def test_fused_with_cache_partial_hits(self):
+        pred = _pred()
+        cache = ReuseCache()
+        cache.put("p", np.array([0, 1]), np.array([1.0, -1.0]))
+        stats = StatsBoard(["p"])
+        a = make_batch({"x": np.array([9.0, 9.0])}, row_ids=np.arange(2))
+        b = make_batch({"x": np.array([3.0, -3.0])}, row_ids=np.arange(2, 4))
+        outs = evaluate_fused(
+            pred, [a, b], stats=stats, cache=cache,
+            clock=WallClock(), worker_id="w", device_group="cpu")
+        # rows 0/1 resolve from cache (1.0 pass, -1.0 fail), rows 2/3 compute
+        np.testing.assert_array_equal(outs[0].row_ids, [0])
+        np.testing.assert_array_equal(outs[1].row_ids, [2])
+
+
+# --------------------------- end-to-end executor --------------------------- #
+class TestExecutorCoalescing:
+    def _run(self, coalesce, *, shards=None, n=48, rows=8, seed=7):
+        rng = np.random.default_rng(seed)
+        preds = [_pred("p1", thresh=-1.0, fixed=0.002, marginal=1e-5,
+                       sleep=0.002),
+                 _pred("p2", thresh=-0.5, fixed=0.002, marginal=1e-5,
+                       sleep=0.002)]
+        batches = []
+        for i in range(n):
+            r = 0 if i % 16 == 15 else rows  # empties exercise rows==0 path
+            batches.append(make_batch(
+                {"x": rng.normal(size=r)},
+                row_ids=np.arange(i * rows, i * rows + r), bid=1000 + i))
+        ex = AQPExecutor(preds, coalesce=coalesce, warmup=False,
+                         max_workers=1, shards=shards)
+        outs = ex.collect(iter(batches))
+        expected = Counter(
+            int(r)
+            for b in batches
+            for r in b.row_ids[(b.data["x"] > -1.0) & (b.data["x"] > -0.5)]
+        )
+        got = Counter(int(r) for o in outs for r in o.row_ids)
+        assert got == expected
+        return ex
+
+    def test_threaded_sharded_terminates_with_coalescing(self):
+        """In-flight accounting with fused launches splitting into k
+        outputs: a 2-shard threaded run with coalescing on must terminate
+        (the termination barrier sees one completion per started batch)
+        and produce exactly the naive result set."""
+        ex = self._run("adaptive", shards=2)
+        snap = ex.stats_snapshot()
+        fused = sum(snap[p]["fused_launches"] for p in ("p1", "p2"))
+        assert fused > 0, "coalescing path was never exercised"
+        assert snap["_coalesce"]["mode"] == "adaptive"
+
+    def test_fixed_mode_end_to_end(self):
+        ex = self._run(4)
+        snap = ex.stats_snapshot()
+        assert snap["_coalesce"]["mode"] == "fixed"
+        assert sum(snap[p]["fused_launches"] for p in ("p1", "p2")) > 0
+
+    def test_off_by_default_and_no_snapshot_key(self):
+        ex = self._run(None, n=16)
+        snap = ex.stats_snapshot()
+        assert "_coalesce" not in snap
+        assert sum(snap[p]["fused_launches"] for p in ("p1", "p2")) == 0
+
+    def test_queue_capacity_defaults(self):
+        preds = [_pred("p1")]
+        ex = AQPExecutor(preds, coalesce="adaptive")
+        try:
+            w = ex.laminars["p1"].workers[0]
+            assert w.queue.capacity == COALESCE_QUEUE_CAPACITY
+        finally:
+            ex.shutdown()
+        ex = AQPExecutor(preds)
+        try:
+            assert ex.laminars["p1"].workers[0].queue.capacity == 2
+        finally:
+            ex.shutdown()
+        ex = AQPExecutor(preds, coalesce="adaptive", worker_queue_capacity=3)
+        try:
+            assert ex.laminars["p1"].workers[0].queue.capacity == 3
+        finally:
+            ex.shutdown()
+
+    def test_simclock_deterministic_with_coalescing_off(self):
+        """Pinned-timeline guard: the SimClock makespan with the default
+        (coalescing off) is identical run-to-run — the knob's default
+        cannot perturb the deterministic suites."""
+        def run():
+            preds = [_pred("p1", thresh=-10.0, fixed=0.0, marginal=0.001)]
+            batches = [make_batch({"x": np.ones(8) * (i + 1)},
+                                  row_ids=np.arange(i * 8, i * 8 + 8),
+                                  bid=i)
+                       for i in range(10)]
+            ex = AQPExecutor(preds, clock=SimClock(), warmup=False,
+                             max_workers=1)
+            ex.collect(iter(batches))
+            return ex.makespan
+
+        m1, m2 = run(), run()
+        assert m1 == m2 > 0
