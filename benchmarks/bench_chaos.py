@@ -1,0 +1,257 @@
+"""Chaos benchmark: transient launch faults under ``on_fault="retry"``.
+
+The fault-tolerance claim (core/faults.py) is that a flaky predicate is a
+RUNTIME condition the executor absorbs, not a query abort: retried
+launches must converge to the exact fault-free answer, and the retry
+machinery must cost bounded makespan, not a multiple of it.
+
+Workload: sleep predicates (fixed + marginal launch cost, the same
+GIL-releasing accelerator stand-ins as bench_coalescing) filtering by
+coprime moduli, so the planted ground truth is analytic.  Three runs:
+
+  fault_free  — ``on_fault="fail_fast"`` and no injection: the baseline
+                timing AND the reference row-id multiset.
+  faulty      — identical stream with a seeded ``FaultPlan`` injecting
+                ~FAULT_PROBABILITY transient launch failures per attempt
+                on every predicate, under ``on_fault="retry"``.
+  quarantine  — a predicate failing EVERY launch (probability=1.0) beside
+                healthy siblings, with warmup on: the run must terminate
+                with the failing predicate quarantined and every batch
+                carrying its conservative pass-through flag.
+
+Correctness gates (ENFORCED, both modes): the faulty run completes the
+EXACT row-id multiset of the fault-free run (which itself matches the
+analytic ground truth) with zero pass-through verdicts — transient faults
+are invisible to results; the quarantine run terminates with the failing
+predicate quarantined and the healthy predicates' exact multiset.
+
+Timing gate (ENFORCED, both modes): faulty makespan <= MAX_OVERHEAD x
+fault-free.  Sleep-dominated predicates make this core-count independent
+— the overhead is the injected retries' backoff + relaunch time, not a
+scheduling artifact — so it survives a loaded 1-core CI runner.
+
+Modes (env CHAOS_BENCH_MODE or ``main(mode=...)``):
+  smoke — CI-sized (~40 batches); regenerates BENCH_chaos.json so the
+          artifact always matches the harness.
+  full  — the committed-artifact run (96 batches).
+
+The artifact is written by THIS harness (never hand-edited): repo-root
+BENCH_chaos.json.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from benchmarks.harness import record
+from repro.core import (
+    AQPExecutor, CostDriven, FaultConfig, FaultPlan, Predicate, UDF,
+    make_batch,
+)
+
+ROWS_PER_BATCH = 8
+CENTRAL_CAPACITY = 128
+
+# sleep predicates: per-launch fixed + per-row marginal (seconds), one
+# coprime modulus each so the surviving set is analytic
+MODULI = (3, 5, 7, 11, 13)
+SLEEP_FIXED_S = 0.002
+SLEEP_MARGINAL_S = 2e-5
+
+FAULT_PROBABILITY = 0.05   # ~5% transient failures per launch attempt
+FAULT_SEED = 7
+RETRY_CONFIG = FaultConfig(
+    mode="retry", max_attempts=6, backoff_base_s=0.002, backoff_cap_s=0.01,
+    jitter=0.25, seed=FAULT_SEED, quarantine_after=12,
+)
+MAX_OVERHEAD = 1.5         # faulty makespan <= 1.5x fault-free (enforced)
+
+FULL_BATCHES, SMOKE_BATCHES = 96, 40
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "BENCH_chaos.json")
+
+
+def build_predicates(moduli=MODULI) -> List[Predicate]:
+    """Fresh predicates per run: UDF state (out_spec, degraded) is
+    per-instance, and a fair timing comparison starts cold."""
+    preds = []
+    for i, m in enumerate(moduli):
+        def fn(cols, _m=m):
+            time.sleep(SLEEP_FIXED_S + SLEEP_MARGINAL_S * len(cols["rid"]))
+            return cols["rid"] % _m != 0
+
+        udf = UDF(name=f"mod{m}", fn=fn, columns=("rid",), bucket=False,
+                  resource=f"r{i}",
+                  cost_model=lambda r: SLEEP_FIXED_S + SLEEP_MARGINAL_S * r)
+        preds.append(Predicate(name=f"mod{m}", udf=udf,
+                               compare=lambda out: out.astype(bool)))
+    return preds
+
+
+def build_batches(n: int):
+    return [
+        make_batch({"rid": np.arange(b * ROWS_PER_BATCH,
+                                     (b + 1) * ROWS_PER_BATCH)},
+                   row_ids=np.arange(b * ROWS_PER_BATCH,
+                                     (b + 1) * ROWS_PER_BATCH))
+        for b in range(n)
+    ]
+
+
+def expected_row_ids(n_rows: int, moduli=MODULI):
+    rid = np.arange(n_rows)
+    mask = np.ones(n_rows, bool)
+    for m in moduli:
+        mask &= rid % m != 0
+    return collections.Counter(rid[mask].tolist())
+
+
+def run_once(n_batches: int, *, on_fault, fault_plan=None):
+    preds = build_predicates()
+    ex = AQPExecutor(
+        preds,
+        policy=CostDriven(),
+        max_workers=1,
+        warmup=False,
+        central_capacity=CENTRAL_CAPACITY,
+        on_fault=on_fault,
+        fault_plan=fault_plan,
+    )
+    t0 = time.perf_counter()
+    done = ex.collect(iter(build_batches(n_batches)))
+    elapsed = time.perf_counter() - t0
+    row_ids = collections.Counter()
+    passthrough = 0
+    for b in done:
+        row_ids.update(b.row_ids.tolist())
+        passthrough += len(b.passthrough)
+    faults = ex.stats_snapshot()["_faults"]
+    return {
+        "elapsed_s": elapsed,
+        "batches_per_s": n_batches / elapsed,
+        "injected": 0 if fault_plan is None else fault_plan.injected,
+        "failures": sum(f["failures"] for f in faults.values()),
+        "retries": sum(f["retries"] for f in faults.values()),
+        "passthrough_flags": passthrough,
+        "quarantined": sorted(n for n, f in faults.items()
+                              if f["quarantined"]),
+    }, row_ids
+
+
+def run_quarantine(n_batches: int):
+    """A predicate failing every launch must not take the query down: it
+    quarantines, every batch carries its pass-through flag, and the
+    healthy predicates' exact multiset survives — with warmup ON, so the
+    never-measured failing predicate exercises the warmup-gate exemption."""
+    preds = build_predicates(moduli=MODULI[:2])
+    plan = FaultPlan(seed=FAULT_SEED).fail(preds[0].name, probability=1.0)
+    cfg = FaultConfig(mode="retry", max_attempts=2, quarantine_after=4,
+                      backoff_base_s=0.001, backoff_cap_s=0.004, jitter=0.0,
+                      seed=FAULT_SEED)
+    ex = AQPExecutor(preds, policy=CostDriven(), max_workers=1, warmup=True,
+                     central_capacity=CENTRAL_CAPACITY, on_fault=cfg,
+                     fault_plan=plan)
+    t0 = time.perf_counter()
+    done = ex.collect(iter(build_batches(n_batches)))
+    elapsed = time.perf_counter() - t0
+
+    n_rows = n_batches * ROWS_PER_BATCH
+    # preds[0] passes through (all rows kept, flagged); preds[1] filters
+    expected = expected_row_ids(n_rows, moduli=MODULI[1:2])
+    got = collections.Counter(int(i) for b in done for i in b.row_ids)
+    assert got == expected, (
+        f"quarantine run lost/duplicated rows: extra={got - expected} "
+        f"missing={expected - got}")
+    flagged = sum(preds[0].name in b.passthrough for b in done)
+    assert flagged == len(done), (
+        f"only {flagged}/{len(done)} outputs carry the pass-through flag")
+    f = ex.stats_snapshot()["_faults"][preds[0].name]
+    assert f["quarantined"], "failing predicate never quarantined"
+    return {
+        "elapsed_s": elapsed,
+        "batches": len(done),
+        "quarantined": True,
+        "skipped_routes": f["skipped_routes"],
+        "quarantined_batches": f["quarantined_batches"],
+    }
+
+
+def main(mode: Optional[str] = None) -> dict:
+    mode = mode or os.environ.get("CHAOS_BENCH_MODE", "smoke")
+    assert mode in ("smoke", "full"), mode
+    n = FULL_BATCHES if mode == "full" else SMOKE_BATCHES
+    n_rows = n * ROWS_PER_BATCH
+    expected = expected_row_ids(n_rows)
+
+    base, base_rows = run_once(n, on_fault="fail_fast")
+    assert base_rows == expected, (
+        f"fault-free run diverged from ground truth: "
+        f"extra={base_rows - expected} missing={expected - base_rows}")
+    record("chaos/fault_free", base["elapsed_s"] / n * 1e6,
+           f"bps={base['batches_per_s']:.1f}")
+
+    plan = FaultPlan(seed=FAULT_SEED)
+    for m in MODULI:
+        plan.fail(f"mod{m}", probability=FAULT_PROBABILITY)
+    faulty, faulty_rows = run_once(n, on_fault=RETRY_CONFIG, fault_plan=plan)
+    # THE gate: transient faults are invisible to results — exact row-id
+    # multiset equality with the fault-free run, zero pass-through verdicts
+    assert faulty_rows == base_rows, (
+        f"faulty run diverged from fault-free: "
+        f"extra={faulty_rows - base_rows} missing={base_rows - faulty_rows}")
+    assert faulty["passthrough_flags"] == 0, (
+        f"transient faults escalated to {faulty['passthrough_flags']} "
+        f"pass-through verdicts (retry budget too small?)")
+    assert faulty["injected"] > 0, "fault plan injected nothing"
+    assert faulty["quarantined"] == [], faulty["quarantined"]
+    overhead = faulty["elapsed_s"] / base["elapsed_s"]
+    faulty["overhead_x"] = overhead
+    record("chaos/faulty", faulty["elapsed_s"] / n * 1e6,
+           f"bps={faulty['batches_per_s']:.1f};injected={faulty['injected']};"
+           f"retries={faulty['retries']};overhead={overhead:.2f}x")
+
+    quarantine = run_quarantine(max(12, n // 2))
+    record("chaos/quarantine", 0.0,
+           f"skips={quarantine['skipped_routes']};"
+           f"qbatches={quarantine['quarantined_batches']}")
+
+    artifact = {
+        "benchmark": "chaos",
+        "mode": mode,
+        "n_preds": len(MODULI),
+        "n_batches": n,
+        "rows_per_batch": ROWS_PER_BATCH,
+        "fault_probability": FAULT_PROBABILITY,
+        "fault_seed": FAULT_SEED,
+        "cpu_count": os.cpu_count() or 1,
+        "row_id_multiset_match": True,  # asserted above for every run
+        "runs": {
+            "fault_free": base,
+            "faulty": faulty,
+            "quarantine": quarantine,
+        },
+        "gates": {
+            "max_overhead": MAX_OVERHEAD,
+            "enforced": True,
+            "reason": "sleep-dominated workload: retry overhead is "
+                      "backoff + relaunch time, core-count independent",
+        },
+    }
+    with open(ARTIFACT, "w") as f:
+        json.dump(artifact, f, indent=2)
+        f.write("\n")
+    record("chaos/artifact", 0.0, os.path.normpath(ARTIFACT))
+
+    assert overhead <= MAX_OVERHEAD, (
+        f"faulty makespan {overhead:.2f}x fault-free exceeds the "
+        f"{MAX_OVERHEAD}x gate")
+    return artifact
+
+
+if __name__ == "__main__":
+    main(mode=os.environ.get("CHAOS_BENCH_MODE"))

@@ -18,6 +18,7 @@ import traceback
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (  # noqa: E402
+    bench_chaos,
     bench_coalescing,
     bench_content_routing,
     bench_kernels,
@@ -41,6 +42,7 @@ SUITES = {
     "kernels": bench_kernels.main,          # kernel hot spots
     "routing": bench_routing_throughput.main,  # sharded eddy core scaling
     "coalescing": bench_coalescing.main,    # adaptive micro-batch fusing
+    "chaos": bench_chaos.main,              # fault injection + retry gates
 }
 
 

@@ -20,6 +20,9 @@ Public surface:
   SimClock / WallClock               — deterministic scheduling evaluation
   CoalesceConfig / CoalescePlanner   — §5.1 adaptive micro-batch coalescing
     (fuse queued batches into one launch; executor knob ``coalesce=``)
+  FaultPlan / FaultLedger / FaultConfig / LaunchWatchdog — fault injection,
+    per-predicate failure statistics, retry/degrade/quarantine policy, and
+    hung-launch detection (executor knob ``on_fault=``; see core/faults.py)
   vectorized (two_stage_filter / cascade_filter) — TPU-native short-circuit
 """
 from repro.core.batch import (  # noqa: F401
@@ -47,6 +50,14 @@ from repro.core.eddy import (  # noqa: F401
     InFlightTracker,
 )
 from repro.core.executor import AQPExecutor  # noqa: F401
+from repro.core.faults import (  # noqa: F401
+    CorruptOutputError,
+    FaultConfig,
+    FaultLedger,
+    FaultPlan,
+    InjectedFault,
+    LaunchWatchdog,
+)
 from repro.core.laminar import GACU_MAX_WORKERS, LaminarRouter  # noqa: F401
 from repro.core.plan import PhysicalPlan, Query, TrivialPredicate, optimize  # noqa: F401
 from repro.core.policies import (  # noqa: F401

@@ -58,6 +58,11 @@ class RoutingBatch:
     warmup: bool = False
     created_at: float = 0.0
     sim_ready: float = 0.0   # virtual arrival time (SimClock runs)
+    # predicates whose verdict on this batch is a conservative PASS
+    # (quarantined predicate or poison batch, see core/faults.py): the
+    # rows were NOT filtered by these predicates, only flagged — consumers
+    # needing exact semantics can drop or re-verify flagged batches
+    passthrough: FrozenSet[str] = frozenset()
 
     @property
     def rows(self) -> int:
@@ -69,6 +74,14 @@ class RoutingBatch:
 
     def mark_visited(self, predicate: str) -> "RoutingBatch":
         return replace(self, visited=self.visited | {predicate})
+
+    def mark_passthrough(self, predicate: str) -> "RoutingBatch":
+        """Conservative pass-through verdict for ``predicate`` (fault
+        quarantine): counts as VISITED — the termination invariant needs
+        every predicate accounted for — but the rows are flagged rather
+        than filtered, so no row is dropped on faulty evidence."""
+        return replace(self, visited=self.visited | {predicate},
+                       passthrough=self.passthrough | {predicate})
 
     def filter(self, mask: np.ndarray) -> "RoutingBatch":
         """Eager materialization: keep only rows where mask is True."""

@@ -160,12 +160,54 @@ class EddyShard(threading.Thread):
         self.error: Optional[BaseException] = None
 
     def _route(self, batch: RoutingBatch) -> None:
+        """Route one non-done batch.  Any failure to hand the batch onward
+        (a closed worker queue, a starvation deadline, a policy error)
+        decrements the in-flight tracker before re-raising — the batch is
+        lost, but the termination barrier stays exact, so sibling shards
+        and the executor observe completion instead of hanging forever on
+        a count that can never reach zero."""
+        try:
+            self._route_inner(batch)
+        except BaseException:
+            self.core.tracker.finished()
+            raise
+
+    def _route_inner(self, batch: RoutingBatch) -> None:
         core = self.core
         remaining = batch.unvisited(core.preds)
-        if core.warmup_enabled and not core.stats.all_measured():
+        ledger = core.faults
+        quarantined = ()
+        if ledger is not None and ledger.has_quarantined:
+            quarantined = ledger.quarantined_names()
+            skipped = [p for p in remaining if p.name in quarantined]
+            if skipped:
+                # failure-aware skip: a fully-quarantined predicate gets
+                # the conservative pass-through verdict at ROUTING time —
+                # the decision is logged per predicate in the ledger
+                for p in skipped:
+                    batch = batch.mark_passthrough(p.name)
+                    ledger.note_skip(p.name)
+                remaining = [p for p in remaining
+                             if p.name not in quarantined]
+                if not remaining:
+                    # completed by skips alone: reinsert; the next pop
+                    # sees batch.done() and finishes it normally
+                    core.central.put_worker(batch)
+                    return
+        warmup_exempt = quarantined
+        if ledger is not None and ledger.dirty:
+            # a predicate that has FAILED and never measured may never
+            # produce a measurement; warmup dispatches one batch per
+            # predicate exactly once, so gating all-measured on it would
+            # circulate every other batch forever — exempt it from the
+            # gate (normal ranking still routes batches at it until it
+            # recovers or quarantines)
+            warmup_exempt = set(quarantined) | set(ledger.failed_names())
+        if core.warmup_enabled \
+                and not core.stats.all_measured(exclude=warmup_exempt):
             target = core.claim_warmup(remaining)
             if target is not None:
-                core.laminars[target.name].submit(batch)
+                self._submit(core.laminars[target.name], batch)
                 return
             # can't help warmup: circular delay (head -> TAIL, §4.1)
             self.circulations += 1
@@ -173,7 +215,21 @@ class EddyShard(threading.Thread):
             time.sleep(WARMUP_CIRCULATION_SLEEP_S)
             return
         ranked = core.policy.rank(batch, remaining, core.stats, core.cache)
-        core.laminars[ranked[0].name].submit(batch)
+        self._submit(core.laminars[ranked[0].name], batch)
+
+    @staticmethod
+    def _submit(laminar, batch: RoutingBatch) -> None:
+        """Hand a batch to a Laminar router, REFUSING the silent-drop
+        path: ``submit`` contracts to return True or raise, but if a
+        router implementation ever returns falsy without raising, the
+        batch would vanish and wedge the termination barrier — turn that
+        into a loud error (which ``_route`` converts into a tracker
+        decrement + shard error)."""
+        if not laminar.submit(batch):
+            raise RuntimeError(
+                f"laminar router for {laminar.pred.name!r} rejected batch "
+                f"{batch.bid} without raising — batch would be lost"
+            )
 
     def run(self) -> None:
         core = self.core
@@ -205,6 +261,10 @@ class EddyShard(threading.Thread):
             pass  # queue torn down mid-route: clean shutdown, not an error
         except BaseException as e:
             self.error = e
+            # wake everything NOW: sibling shards get ClosedError instead
+            # of polling out their timeouts, the pull stops injecting, and
+            # the executor's output wait surfaces the error promptly
+            core.abort()
         finally:
             core._shard_exited()
 
@@ -234,8 +294,12 @@ class EddyShardSet:
         max_shards: Optional[int] = None,
         auto_threshold: float = SHARD_AUTO_THRESHOLD_BPS,
         tracker: Optional[InFlightTracker] = None,
+        faults=None,
     ):
         self.preds = preds
+        # per-predicate FaultLedger (core/faults.py) or None: routing
+        # skips fully-quarantined predicates with a logged pass-through
+        self.faults = faults
         self.central = central
         self.output = output
         self.laminars = laminars
@@ -300,6 +364,14 @@ class EddyShardSet:
                     self._warmup_dispatched.add(p.name)
                     return p
         return None
+
+    def abort(self) -> None:
+        """Error teardown: close both queues so every blocked thread (the
+        pull's watermark wait, sibling shards' stripe waits, the
+        executor's output wait) wakes with ClosedError immediately
+        instead of discovering the failure by poll timeout."""
+        self.central.close()
+        self.output.close()
 
     def _shard_exited(self) -> None:
         with self._lock:

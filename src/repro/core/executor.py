@@ -39,6 +39,38 @@ token — so concurrent executors in one process each record only their own
 launches (per-executor attribution; the old process-global bus
 cross-recorded). The hook is removed in ``shutdown()`` so back-to-back
 executors never double-count either.
+
+FAILURE-SEMANTICS CONTRACT (``on_fault=``, core/faults.py):
+
+* ``"fail_fast"`` (default): today's behavior bit-exact — the first
+  worker exception aborts the query (``run()`` raises RuntimeError with
+  the worker traceback); pull/shard errors raise as themselves.  Even on
+  this path teardown is guaranteed: an errored batch decrements the
+  in-flight tracker (no wedged termination barrier), a failed shard
+  closes both queues so every blocked thread wakes immediately, and
+  ``run()``'s finally / the context-manager ``__exit__`` route through
+  ``shutdown()`` — launch hooks deregister and ``StatsStore.record_board``
+  is still attempted.
+* ``"retry"`` (or a ``FaultConfig``): per-batch retry with capped
+  exponential backoff + seeded jitter (virtual delays under SimClock); a
+  batch exhausting ``max_attempts`` completes as a conservative
+  pass-through (rows kept, predicate flagged in ``batch.passthrough``);
+  ``quarantine_after`` consecutive failures quarantine the predicate —
+  the eddy skips it (logged) and routing ranks penalize flaky predicates
+  by their error-rate EMA.
+* ``"degrade"``: retry semantics plus automatic switch of a repeatedly-
+  failing UDF to its reference path (``UDF.fallback_fn``) after
+  ``degrade_after`` consecutive failures.
+* ``fault_plan=`` injects deterministic faults (tests / bench_chaos);
+  ``stats_snapshot()["_faults"]`` exposes the per-predicate ledger
+  (failures, retries, error-rate EMA, quarantine/degraded state,
+  pass-through counts, deadline hits, skipped routes — see
+  ``FaultLedger.snapshot`` for the key contract).
+* ``launch_deadline_s`` (FaultConfig): hung-launch detection — a
+  wall-clock ``LaunchWatchdog`` thread flags in-flight launches past the
+  deadline (it cannot preempt them; it makes routing see the hang), and
+  under SimClock the deadline is checked post-hoc from virtual
+  turnaround so deterministic timelines stay exact.
 """
 from __future__ import annotations
 
@@ -52,6 +84,7 @@ from repro.core.eddy import (
     SHARD_AUTO_MAX, SHARD_AUTO_THRESHOLD_BPS, EddyPull, EddyShardSet,
     InFlightTracker,
 )
+from repro.core.faults import FaultConfig, FaultLedger, LaunchWatchdog
 from repro.core.laminar import GACU_MAX_WORKERS, LaminarRouter
 from repro.core.policies import (
     ArbiterPolicy, EddyPolicy, HydroPolicy, LaminarPolicy, RoundRobin,
@@ -91,6 +124,8 @@ class AQPExecutor:
         stats_store: Optional[StatsStore] = None,
         coalesce=None,
         worker_queue_capacity: Optional[int] = None,
+        on_fault="fail_fast",
+        fault_plan=None,
     ):
         self.predicates = predicates
         self.policy = policy or HydroPolicy()
@@ -129,6 +164,35 @@ class AQPExecutor:
                                    shards=self._max_shards)
         self._error_lock = threading.Lock()
         self._worker_error = None
+        # Fault tolerance (core/faults.py; module docstring contract):
+        # fail_fast resolves to config None — workers take the
+        # pre-fault-tolerance path byte-for-byte, and the ledger stays
+        # clean (rank penalty exactly 1.0). The injection plan applies
+        # regardless of mode (fail_fast + plan == "assert today's abort").
+        self.fault_config = FaultConfig.resolve(on_fault)
+        self.fault_plan = fault_plan
+        self.faults = FaultLedger(
+            [p.name for p in predicates],
+            seed=self.fault_config.seed if self.fault_config else 0,
+        )
+        self.stats.faults = self.faults
+        self._watchdog = None
+        if (self.fault_config is not None
+                and self.fault_config.launch_deadline_s is not None
+                and not deterministic):
+            # wall clock only: under SimClock deadline detection is
+            # post-hoc from virtual turnaround (evaluate_resilient)
+            self._watchdog = LaunchWatchdog(
+                self.fault_config.launch_deadline_s,
+                on_deadline=lambda name, elapsed:
+                    self.faults.note_deadline(name),
+            )
+        # ONE tracker for the executor's lifetime: worker contexts hold a
+        # reference (to decrement for batches dropped on error paths), so
+        # run() must not swap in a fresh instance. Executors are
+        # effectively one-shot (shutdown closes the queues), so there is
+        # no carry-over between runs to worry about.
+        self._tracker = InFlightTracker()
         # per-executor launch attribution token: every thread this executor
         # owns tags itself with it, and the run()-lifetime stats hook only
         # observes launches from so-tagged threads
@@ -179,6 +243,11 @@ class AQPExecutor:
                     launch_token=self._launch_token,
                     coalesce=self.coalesce_config,
                     worker_queue_capacity=worker_queue_capacity,
+                    fault_plan=self.fault_plan,
+                    fault_ledger=self.faults,
+                    fault_config=self.fault_config,
+                    watchdog=self._watchdog,
+                    tracker=self._tracker,
                 )
         except BaseException:
             # don't poison a shared arbiter with half a registration: the
@@ -234,7 +303,9 @@ class AQPExecutor:
             self._kernel_hook = kernel_launch.connect_stats_board(
                 self.stats, token=self._launch_token
             )
-        tracker = InFlightTracker()
+        if self._watchdog is not None:
+            self._watchdog.start()
+        tracker = self._tracker
         self._pull = EddyPull(source, self.central,
                               launch_token=self._launch_token,
                               tracker=tracker)
@@ -247,6 +318,7 @@ class AQPExecutor:
             max_shards=self._max_shards,
             auto_threshold=self._shard_auto_threshold,
             tracker=tracker,
+            faults=self.faults,
         )
         self._pull.start()
         self._router.start()
@@ -273,7 +345,21 @@ class AQPExecutor:
     def collect(self, source: Iterable[RoutingBatch]) -> List[RoutingBatch]:
         return list(self.run(source))
 
+    # ------------------------- context manager ------------------------- #
+    # ``with AQPExecutor(...) as ex:`` guarantees teardown on EVERY exit
+    # path — including a consumer that abandons the run() generator
+    # mid-iteration, where the generator's own finally-clause only fires
+    # at GC time. shutdown() is idempotent, so run()'s internal teardown
+    # composing with __exit__ is harmless.
+    def __enter__(self) -> "AQPExecutor":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown()
+
     def shutdown(self) -> None:
+        if self._watchdog is not None:
+            self._watchdog.stop()
         if self._kernel_hook is not None:
             kernel_launch.remove_launch_hook(self._kernel_hook)
             self._kernel_hook = None
@@ -300,12 +386,15 @@ class AQPExecutor:
         """Predicate statistics plus arbiter and routing-core counters.
 
         Predicate entries are keyed by name as before; the reserved
-        ``"_arbiter"`` key carries lease/release/denial/handoff counters
-        and ``"_routing"`` the shard-set picture (active shards, steals,
-        circulations, completed). Consumers iterating predicate entries
-        should skip ``_``-keys."""
+        ``"_arbiter"`` key carries lease/release/denial/handoff counters,
+        ``"_routing"`` the shard-set picture (active shards, steals,
+        circulations, completed), and ``"_faults"`` the per-predicate
+        fault ledger (see core/faults.FaultLedger.snapshot for the key
+        contract). Consumers iterating predicate entries should skip
+        ``_``-keys."""
         snap = self.stats.snapshot()
         snap["_arbiter"] = self.arbiter.counters()
+        snap["_faults"] = self.faults.snapshot()
         r = self._router
         snap["_routing"] = {
             "shards_active": r.shards_active if r is not None else 0,

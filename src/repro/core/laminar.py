@@ -68,6 +68,11 @@ class LaminarRouter:
         launch_token=None,
         coalesce: Optional[CoalesceConfig] = None,
         worker_queue_capacity: int = 2,
+        fault_plan=None,
+        fault_ledger=None,
+        fault_config=None,
+        watchdog=None,
+        tracker=None,
     ):
         self.pred = pred
         self.stats = stats
@@ -111,6 +116,11 @@ class LaminarRouter:
                 launch_token=launch_token,
                 coalesce=self.coalesce_planner,
                 queue=BoundedQueue(self._worker_queue_capacity),
+                fault_plan=fault_plan,
+                ledger=fault_ledger,
+                fault_config=fault_config,
+                watchdog=watchdog,
+                tracker=tracker,
             )
 
         # GREEDY allocation of worker contexts (lazy until first batch),
@@ -205,8 +215,15 @@ class LaminarRouter:
                 self._insert(w)
             return w
 
-    def submit(self, batch: RoutingBatch) -> None:
+    def submit(self, batch: RoutingBatch) -> bool:
         """Route a batch to a worker (blocking; scales up under saturation).
+
+        Returns True once the batch is accepted by a worker queue; every
+        failure path RAISES (ClosedError from a stopped worker's queue,
+        RuntimeError on floor starvation) — there is no silent False, so
+        a caller that ignores the return value still cannot lose a batch
+        without an exception crossing it (the eddy shard decrements the
+        in-flight tracker on that exception).
 
         Thread-safe for the N-shard eddy core: the router lock is held only
         for the choose/pin bookkeeping; the blocking queue put, worker
@@ -266,7 +283,7 @@ class LaminarRouter:
                 with self._lock:
                     worker.pinned -= 1
             if ok:
-                return
+                return True
             # queue full: undo accounting, scale, retry
             self.stats.finish_load(worker.wid, load)
 

@@ -62,6 +62,18 @@ def _sel_key(sel: float, resolution: float = SEL_RESOLUTION) -> float:
     return round(sel / resolution) * resolution
 
 
+def _fault_penalty(stats, name: str) -> float:
+    """Failure-aware rank multiplier (core/faults.py): the error-rate EMA
+    of a flaky predicate inflates its cost/score key so healthy siblings
+    run first — a soft deferral; outright removal from routing is the
+    quarantine skip in the eddy shard, not a policy concern.  Exactly 1.0
+    (so ``key * 1.0 == key`` bit-exact) when no ledger is attached or the
+    predicate has never failed; SelectivityDriven deliberately ignores it
+    (pure-selectivity ablation)."""
+    ledger = getattr(stats, "faults", None)
+    return 1.0 if ledger is None else ledger.rank_penalty(name)
+
+
 class EddyPolicy:
     name = "base"
 
@@ -80,7 +92,7 @@ class CostDriven(EddyPolicy):
         # deterministic tie-break: equal-cost predicates order by
         # (quantized) selectivity — drop more rows first — then by name.
         return sorted(preds, key=lambda p: (
-            self.est_cost(batch, p, stats, cache),
+            self.est_cost(batch, p, stats, cache) * _fault_penalty(stats, p.name),
             _sel_key(stats[p.name].selectivity()),
             p.name,
         ))
@@ -106,7 +118,8 @@ class ScoreDriven(EddyPolicy):
 
     def rank(self, batch, preds, stats, cache):
         return sorted(preds, key=lambda p: (
-            stats[p.name].score(resolution=SEL_RESOLUTION),
+            stats[p.name].score(resolution=SEL_RESOLUTION)
+            * _fault_penalty(stats, p.name),
             stats[p.name].cost(),
             p.name,
         ))
@@ -146,7 +159,8 @@ class ContentBased(EddyPolicy):
             stats.bucket_fn = self.bucket_fn
         b = stats.bucket_of(batch)
         return sorted(preds, key=lambda p: (
-            stats[p.name].score(bucket=b, resolution=SEL_RESOLUTION),
+            stats[p.name].score(bucket=b, resolution=SEL_RESOLUTION)
+            * _fault_penalty(stats, p.name),
             stats[p.name].cost(),
             p.name,
         ))

@@ -445,6 +445,11 @@ class StatsBoard:
         self.worker_load: Dict[str, float] = {}
         self.proxy_rate = Ema(0.3)  # seconds per proxy unit (data-aware ETA)
         self.bucket_fn = None       # content-based routing: batch -> bucket id
+        # failure-aware routing: the executor attaches its FaultLedger
+        # (core/faults.py) here; policies fold ``fault_penalty`` into
+        # their rank keys. None (or a clean ledger) => penalty exactly
+        # 1.0, so fault-free rank keys are bit-identical.
+        self.faults = None
         self._lock = threading.Lock()
         self._load_locks = [threading.Lock() for _ in range(self.shards)]
 
@@ -466,6 +471,13 @@ class StatsBoard:
             return int(self.bucket_fn(batch))
         except Exception:
             return None
+
+    def fault_penalty(self, name: str) -> float:
+        """Routing rank multiplier from the attached FaultLedger: exactly
+        1.0 for a healthy predicate, growing in the error-rate EMA for a
+        flaky one (see core/faults.FaultLedger.rank_penalty)."""
+        f = self.faults
+        return 1.0 if f is None else f.rank_penalty(name)
 
     def note_proxy_rate(self, units: float, seconds: float) -> None:
         if units > 0:
@@ -535,14 +547,20 @@ class StatsBoard:
             name = "kernel:" + name
         return self.ensure(name)
 
-    def all_measured(self) -> bool:
+    def all_measured(self, exclude: Sequence[str] = ()) -> bool:
         """Warmup gate: every DECLARED routing predicate has a measurement.
 
         Lazily-created kernel entries are deliberately excluded — a kernel
         timing arriving mid-warmup must not wedge the router into waiting
-        for a "predicate" it can never route a batch to."""
+        for a "predicate" it can never route a batch to.  ``exclude``
+        names predicates exempt from the gate: a QUARANTINED predicate
+        (core/faults.py) may never produce a measurement, and waiting for
+        one would circulate warmup batches forever."""
         with self._lock:
-            return all(self.preds[n].measured for n in self._declared)
+            return all(
+                self.preds[n].measured for n in self._declared
+                if n not in exclude
+            )
 
     # ---------------- data-aware load accounting ---------------- #
     # The ledger lock is striped by worker id: submits racing from

@@ -66,6 +66,12 @@ class UDF:
     # version, see core/statstore.canonical_fingerprint) keying the
     # persistent statistics store; None falls back to udf:<name>
     fingerprint: Optional[str] = None
+    # Graceful degradation (core/faults.py): a reference/interpret-mode
+    # implementation of ``fn``; ``degrade()`` flips evaluation onto it
+    # when the compiled path fails repeatedly. None == nothing to fall
+    # back to (degrade-mode fault handling then quarantines instead).
+    fallback_fn: Optional[Callable[[Dict[str, np.ndarray]], np.ndarray]] = None
+    degraded: bool = field(default=False, repr=False)
     _ready: bool = field(default=False, repr=False)
     # output dtype + trailing shape, learned from the first evaluation so
     # zero-row calls don't have to launch the kernel just for metadata
@@ -85,6 +91,30 @@ class UDF:
                     )
             self._ready = True
 
+    @property
+    def out_spec(self) -> Optional[tuple]:
+        """(dtype, trailing shape) learned from the first evaluation, or
+        None before any launch — the worker's corruption check compares
+        subsequent outputs against it."""
+        return self._out_spec
+
+    def degrade(self) -> bool:
+        """Switch evaluation to ``fallback_fn`` (the reference path).
+
+        Returns True if a fallback exists and the switch happened; False
+        when there is nothing to degrade to (caller falls through to
+        quarantine). Sticky for the UDF's lifetime — a degraded
+        executable does not get retried."""
+        if self.fallback_fn is None or self.degraded:
+            return False
+        self.degraded = True
+        return True
+
+    def _active_fn(self) -> Callable[[Dict[str, np.ndarray]], np.ndarray]:
+        if self.degraded and self.fallback_fn is not None:
+            return self.fallback_fn
+        return self.fn
+
     def proxy(self, data: Dict[str, np.ndarray]) -> float:
         if self.proxy_cost is not None:
             return float(self.proxy_cost(data))
@@ -93,6 +123,7 @@ class UDF:
 
     def __call__(self, data: Dict[str, np.ndarray]) -> np.ndarray:
         self.ensure_ready()
+        fn = self._active_fn()
         cols = {c: np.asarray(data[c]) for c in self.columns}
         rows = len(next(iter(cols.values())))
         if rows == 0:
@@ -106,7 +137,7 @@ class UDF:
                     c: np.zeros((1,) + v.shape[1:], v.dtype)
                     for c, v in cols.items()
                 }
-                probe = self.fn(probe_cols)
+                probe = fn(probe_cols)
                 if probe is None:
                     # cache a sentinel so fn(None) doesn't re-probe forever
                     self._out_spec = (np.dtype(np.float64), ())
@@ -117,12 +148,12 @@ class UDF:
             dtype, trailing = self._out_spec
             return np.zeros((0,) + tuple(trailing), dtype)
         if not self.bucket:
-            out = np.asarray(self.fn(cols))
+            out = np.asarray(fn(cols))
         else:
             b = bucket_rows(rows)
             if b != rows:
                 cols = {c: pad_rows(v, b) for c, v in cols.items()}
-            out = np.asarray(self.fn(cols))[:rows]
+            out = np.asarray(fn(cols))[:rows]
         if out.ndim:
             self._out_spec = (out.dtype, out.shape[1:])
         return out

@@ -35,6 +35,37 @@ Per-executor launch attribution: each worker thread tags itself with its
 executor's ``launch_token`` so kernel-launch timing hooks registered by
 that executor (thread-affine, see kernels/launch.py) only observe its own
 launches — concurrent executors in one process never cross-record.
+
+FAILURE SEMANTICS (core/faults.py; executor knob ``on_fault``):
+
+* ``fail_fast`` (default, and whenever no FaultConfig is supplied):
+  ``evaluate_resilient`` delegates straight to ``evaluate_predicate`` —
+  the pre-fault-tolerance path, byte-for-byte — and any evaluation
+  exception aborts the query via ``on_error``.  The worker DOES decrement
+  the in-flight tracker for every batch it drops on the error path, so an
+  errored batch can never wedge the termination barrier.
+* ``retry``: each failed attempt is recorded in the FaultLedger
+  (error-rate EMA + consecutive count) and retried up to
+  ``max_attempts`` with capped exponential backoff + seeded jitter —
+  under SimClock the delay advances the batch's VIRTUAL ready time, never
+  a wall sleep, so injected timelines stay bit-exact.  A batch that
+  exhausts its attempts is a POISON BATCH: it completes with a
+  conservative pass-through verdict (all rows kept, flagged in
+  ``batch.passthrough``) so the row-id-multiset and termination
+  invariants hold.  ``quarantine_after`` consecutive failures quarantine
+  the PREDICATE: the eddy stops routing to it (skips are logged) and any
+  batch already in its queue passes through.
+* ``degrade``: retry semantics plus, after ``degrade_after`` consecutive
+  failures, the UDF is switched to its reference path
+  (``UDF.fallback_fn``) — injected ``compiled_only`` faults stop firing,
+  modelling a bug in the compiled executable that the interpreter
+  escapes.  No fallback -> falls through to quarantine.
+* Corrupt outputs (wrong leading row count; wrong dtype vs the UDF's
+  learned ``out_spec`` under injection) raise ``CorruptOutputError``
+  BEFORE the result can enter the reuse cache, and count as failures.
+* A FUSED (coalesced) launch that fails is un-fused: one ledger failure
+  for the group attempt, then each constituent retries individually so a
+  poison batch is isolated alone rather than poisoning its whole group.
 """
 from __future__ import annotations
 
@@ -49,6 +80,10 @@ import numpy as np
 from repro.core.batch import RoutingBatch, concat, split_back
 from repro.core.cache import ReuseCache
 from repro.core.coalesce import CoalescePlanner
+from repro.core.faults import (
+    CorruptOutputError, FaultConfig, FaultLedger, FaultPlan, LaunchWatchdog,
+    backoff_delay,
+)
 from repro.core.queues import BoundedQueue, CentralQueue, ClosedError
 from repro.core.simclock import SimClock
 from repro.core.stats import StatsBoard
@@ -56,7 +91,35 @@ from repro.core.udf import Predicate
 from repro.kernels import launch as kernel_launch
 
 
-def _evaluate_with_cache(pred, batch, data, *, cache, stats):
+def _checked_outputs(pred, data, rows: int, faults, clock) -> np.ndarray:
+    """One evaluation through the (optional) fault-injection seam, with
+    output validation BEFORE the caller may cache the result.
+
+    The leading-dimension check always runs (a wrong row count would
+    corrupt the mask/filter contract silently); the dtype check against
+    the UDF's learned ``out_spec`` runs only under injection, where a
+    ``corrupt`` spec deliberately flips it — real UDFs are allowed dtype
+    drift (the cache merge already promotes dtypes)."""
+    if faults is None:
+        outputs = pred.evaluate_outputs(data)
+    else:
+        outputs = faults.invoke(pred, data, clock)
+    out = np.asarray(outputs)
+    if out.ndim == 0 or out.shape[0] != rows:
+        raise CorruptOutputError(
+            f"{pred.name}: expected {rows} output rows, got shape {out.shape}"
+        )
+    if faults is not None:
+        spec = getattr(pred.udf, "out_spec", None)
+        if spec is not None and out.dtype != spec[0]:
+            raise CorruptOutputError(
+                f"{pred.name}: output dtype {out.dtype} != learned {spec[0]}"
+            )
+    return out
+
+
+def _evaluate_with_cache(pred, batch, data, *, cache, stats, faults=None,
+                         clock=None):
     """Cache probe -> compute misses -> vectorized hit/miss merge.
 
     Returns ``(outputs, wall_seconds, computed_rows, compute_data)`` where
@@ -64,7 +127,9 @@ def _evaluate_with_cache(pred, batch, data, *, cache, stats):
     cache hit) and ``compute_data`` the column dict that was computed
     (None when nothing was) — the compute-only proxy load, so the
     proxy->seconds rate is never fed a full batch's load against a
-    near-zero cached wall time."""
+    near-zero cached wall time.  Output validation (``_checked_outputs``)
+    precedes every ``cache.put_batch``, so a corrupt result can never
+    poison the reuse cache."""
     rows = batch.rows
     if cache is not None and pred.cacheable:
         # batch-aware probe: a layered cache digests the row payloads so
@@ -81,7 +146,8 @@ def _evaluate_with_cache(pred, batch, data, *, cache, stats):
             if computed_rows:
                 sub = {c: v[miss] for c, v in data.items()}
                 t0 = time.perf_counter()
-                sub_out = np.asarray(pred.evaluate_outputs(sub))
+                sub_out = _checked_outputs(pred, sub, computed_rows,
+                                           faults, clock)
                 wall = time.perf_counter() - t0
                 cache.put_batch(pred.udf.name, batch.row_ids[miss], sub,
                                 sub_out)
@@ -99,12 +165,12 @@ def _evaluate_with_cache(pred, batch, data, *, cache, stats):
             outputs[hits] = hit_vals
             return outputs, 0.0, 0, None
         t0 = time.perf_counter()
-        outputs = pred.evaluate_outputs(data)
+        outputs = _checked_outputs(pred, data, rows, faults, clock)
         wall = time.perf_counter() - t0
         cache.put_batch(pred.udf.name, batch.row_ids, data, outputs)
         return outputs, wall, rows, data
     t0 = time.perf_counter()
-    outputs = pred.evaluate_outputs(data)
+    outputs = _checked_outputs(pred, data, rows, faults, clock)
     wall = time.perf_counter() - t0
     return outputs, wall, rows, data
 
@@ -130,6 +196,7 @@ def evaluate_predicate(
     worker_id: str,
     device_group: str,
     serial_fraction: float = 0.0,
+    faults: Optional[FaultPlan] = None,
 ) -> RoutingBatch:
     """Evaluate one predicate on one batch; returns the filtered batch."""
     rows = batch.rows
@@ -138,12 +205,16 @@ def evaluate_predicate(
 
     data = {c: batch.data[c] for c in pred.udf.columns}
     outputs, wall, computed_rows, compute_data = _evaluate_with_cache(
-        pred, batch, data, cache=cache, stats=stats
+        pred, batch, data, cache=cache, stats=stats, faults=faults,
+        clock=clock,
     )
 
     finish = None
     if isinstance(clock, SimClock):
         cost = _sim_cost(pred, computed_rows, data, wall)
+        if faults is not None:
+            # injected hang under SimClock: extra VIRTUAL occupancy
+            cost += faults.take_extra_cost()
         finish = clock.occupy_shared(
             worker_id, device_group, cost, serial_fraction, ready=batch.sim_ready
         )
@@ -178,6 +249,7 @@ def evaluate_fused(
     worker_id: str,
     device_group: str,
     serial_fraction: float = 0.0,
+    faults: Optional[FaultPlan] = None,
 ) -> List[RoutingBatch]:
     """Evaluate ``batches`` as ONE fused launch; returns per-bid outputs.
 
@@ -193,12 +265,15 @@ def evaluate_fused(
     fused, segments = concat(batches)
     data = {c: fused.data[c] for c in pred.udf.columns}
     outputs, wall, computed_rows, compute_data = _evaluate_with_cache(
-        pred, fused, data, cache=cache, stats=stats
+        pred, fused, data, cache=cache, stats=stats, faults=faults,
+        clock=clock,
     )
 
     finish = None
     if isinstance(clock, SimClock):
         cost = _sim_cost(pred, computed_rows, data, wall)
+        if faults is not None:
+            cost += faults.take_extra_cost()
         finish = clock.occupy_shared(
             worker_id, device_group, cost, serial_fraction, ready=fused.sim_ready
         )
@@ -219,6 +294,101 @@ def evaluate_fused(
     if computed_rows and compute_data is not None:
         stats.note_proxy_rate(pred.udf.proxy(compute_data), seconds)
     return outs
+
+
+def passthrough_batch(batch: RoutingBatch, pred_name: str) -> RoutingBatch:
+    """Complete ``batch`` with a conservative quarantine verdict: every
+    row PASSES (no row is dropped on faulty evidence) and the predicate is
+    flagged in ``batch.passthrough`` for downstream auditing.  The batch
+    completes like any other, so the in-flight termination barrier and the
+    row-id-multiset invariant hold unchanged."""
+    return batch.mark_passthrough(pred_name)
+
+
+def evaluate_resilient(
+    pred: Predicate,
+    batch: RoutingBatch,
+    *,
+    stats: StatsBoard,
+    cache: Optional[ReuseCache],
+    clock,
+    worker_id: str,
+    device_group: str,
+    serial_fraction: float = 0.0,
+    faults: Optional[FaultPlan] = None,
+    ledger: Optional[FaultLedger] = None,
+    config: Optional[FaultConfig] = None,
+    watchdog: Optional[LaunchWatchdog] = None,
+) -> RoutingBatch:
+    """Fault-policy wrapper around ``evaluate_predicate`` implementing the
+    retry / degrade / quarantine contract (module docstring).
+
+    With no ``config``/``ledger`` (``on_fault="fail_fast"``) this is a
+    direct delegation — the pre-fault-tolerance path, byte-for-byte."""
+    if config is None or ledger is None:
+        return evaluate_predicate(
+            pred, batch, stats=stats, cache=cache, clock=clock,
+            worker_id=worker_id, device_group=device_group,
+            serial_fraction=serial_fraction, faults=faults,
+        )
+    if batch.rows == 0:
+        return batch.mark_visited(pred.name)
+    if ledger.is_quarantined(pred.name):
+        # raced into the worker queue after quarantine tripped: same
+        # conservative verdict the routing-level skip would have applied
+        ledger.note_quarantined_batch(pred.name, batch.rows)
+        return passthrough_batch(batch, pred.name)
+    simulated = getattr(clock, "simulated", False)
+    attempt = 0
+    while True:
+        attempt += 1
+        token = watchdog.begin(pred.name) if watchdog is not None else None
+        t0 = time.perf_counter()
+        try:
+            out = evaluate_predicate(
+                pred, batch, stats=stats, cache=cache, clock=clock,
+                worker_id=worker_id, device_group=device_group,
+                serial_fraction=serial_fraction, faults=faults,
+            )
+        except ClosedError:
+            raise  # shutdown in progress, not an evaluation fault
+        except Exception as e:
+            consecutive = ledger.note_failure(pred.name, error=e)
+            if (config.mode == "degrade"
+                    and consecutive >= config.degrade_after
+                    and not pred.udf.degraded and pred.udf.degrade()):
+                ledger.note_degraded(pred.name)
+            if consecutive >= config.quarantine_after:
+                ledger.set_quarantined(pred.name)
+            if ledger.is_quarantined(pred.name) \
+                    or attempt >= config.max_attempts:
+                # poison batch: conservative pass-through completion
+                ledger.note_quarantined_batch(pred.name, batch.rows)
+                return passthrough_batch(batch, pred.name)
+            ledger.note_retry(pred.name)
+            delay = backoff_delay(config, attempt,
+                                  ledger.jitter_rng(pred.name))
+            if simulated:
+                # virtual backoff: the retry cannot start before the
+                # delay elapses in SIMULATED time — never a wall sleep
+                batch = _replace(batch, sim_ready=batch.sim_ready + delay)
+            elif delay > 0.0:
+                clock.sleep(delay)
+            continue
+        finally:
+            if token is not None:
+                watchdog.end(token)
+        ledger.note_success(pred.name)
+        if config.launch_deadline_s is not None:
+            # post-hoc deadline accounting: virtual turnaround under
+            # SimClock (the watchdog thread never runs there), wall
+            # elapsed otherwise (the live watchdog additionally flags
+            # launches still in flight past the deadline)
+            elapsed = (out.sim_ready - batch.sim_ready if simulated
+                       else time.perf_counter() - t0)
+            if elapsed > config.launch_deadline_s:
+                ledger.note_deadline(pred.name)
+        return out
 
 
 @dataclass
@@ -250,6 +420,16 @@ class WorkerContext:
     on_idle: Optional[Callable[["WorkerContext"], bool]] = None
     launch_token: Optional[object] = None
     coalesce: Optional[CoalescePlanner] = None
+    # fault tolerance (core/faults.py): the injection plan (tests/chaos
+    # bench), the shared per-predicate ledger, the retry policy (None ==
+    # fail_fast), the wall-clock launch watchdog, and the executor's
+    # in-flight tracker — decremented for every batch dropped on an error
+    # path so the termination barrier cannot leak
+    fault_plan: Optional[FaultPlan] = None
+    ledger: Optional[FaultLedger] = None
+    fault_config: Optional[FaultConfig] = None
+    watchdog: Optional[LaunchWatchdog] = None
+    tracker: Optional[object] = None
     # submits in flight (set under the router lock): a pinned worker must
     # not retire, or the in-flight batch would land in a dead queue
     pinned: int = 0
@@ -324,25 +504,39 @@ class WorkerContext:
         launch when there are at least two."""
         fusable = [b for b in batches if b.rows > 0]
         if len(fusable) < 2:
-            return [
-                evaluate_predicate(
-                    self.pred, b,
-                    stats=self.stats, cache=self.cache, clock=self.clock,
-                    worker_id=self.wid, device_group=self.device_group,
-                    serial_fraction=self.serial_fraction,
-                )
-                for b in batches
-            ]
-        fused_outs = iter(evaluate_fused(
-            self.pred, fusable,
-            stats=self.stats, cache=self.cache, clock=self.clock,
-            worker_id=self.wid, device_group=self.device_group,
-            serial_fraction=self.serial_fraction,
-        ))
+            return [self._evaluate_one(b) for b in batches]
+        try:
+            fused_outs = iter(evaluate_fused(
+                self.pred, fusable,
+                stats=self.stats, cache=self.cache, clock=self.clock,
+                worker_id=self.wid, device_group=self.device_group,
+                serial_fraction=self.serial_fraction,
+                faults=self.fault_plan,
+            ))
+        except ClosedError:
+            raise
+        except Exception as e:
+            if self.fault_config is None or self.ledger is None:
+                raise  # fail_fast: the pre-fault-tolerance abort path
+            # fused-launch failure: one ledger failure for the group
+            # attempt, then UN-FUSE — each batch retries individually so
+            # a poison batch is quarantined alone, not its whole group
+            self.ledger.note_failure(self.pred.name, error=e)
+            return [self._evaluate_one(b) for b in batches]
         return [
             next(fused_outs) if b.rows > 0 else b.mark_visited(self.pred.name)
             for b in batches
         ]
+
+    def _evaluate_one(self, b: RoutingBatch) -> RoutingBatch:
+        return evaluate_resilient(
+            self.pred, b,
+            stats=self.stats, cache=self.cache, clock=self.clock,
+            worker_id=self.wid, device_group=self.device_group,
+            serial_fraction=self.serial_fraction,
+            faults=self.fault_plan, ledger=self.ledger,
+            config=self.fault_config, watchdog=self.watchdog,
+        )
 
     def _run(self) -> None:
         if self.launch_token is not None:
@@ -363,6 +557,8 @@ class WorkerContext:
                 continue
             except ClosedError:
                 return
+            batches = [batch]
+            reinserted = 0
             try:
                 batches = self._drain_coalesce(batch)
                 outs = self._evaluate_group(batches)
@@ -373,12 +569,25 @@ class WorkerContext:
                     self.stats.finish_load(self.wid, load)
                     self.batches_done += 1
                     self.central.put_worker(out)
+                    reinserted += 1
             except ClosedError:
+                self._untrack(len(batches) - reinserted)
                 return
             except Exception as e:  # propagate to the executor
+                self._untrack(len(batches) - reinserted)
                 if self.on_error is not None:
                     self.on_error(e, traceback.format_exc())
                 return
+
+    def _untrack(self, dropped: int) -> None:
+        """Decrement the in-flight tracker for batches this worker dropped
+        on an error/shutdown path (they will never complete): without
+        this, an errored batch leaks the termination barrier and sibling
+        shards poll until their timeout instead of exiting."""
+        if self.tracker is None:
+            return
+        for _ in range(dropped):
+            self.tracker.finished()
 
     def stop(self) -> None:
         self.queue.close()

@@ -267,10 +267,22 @@ def pallas_call(
     @functools.wraps(kernel)
     def call(*args):
         hooks = _snapshot_hooks()
-        if not hooks:
+        wd = _WATCHDOG
+        if not hooks and wd is None:
             return launched(*args)
+        # launch-deadline watchdog (core/faults.LaunchWatchdog): bracket
+        # the eager launch so a scan thread can flag it if it hangs — the
+        # launching thread is blocked inside XLA and cannot report for
+        # itself. Tracer-phase calls are bracketed too (a hang during
+        # trace/compile is just as wedging); only the TIMING event below
+        # stays eager-only.
+        token = wd.begin(name) if wd is not None else None
         t0 = time.perf_counter()
-        out = launched(*args)
+        try:
+            out = launched(*args)
+        finally:
+            if wd is not None:
+                wd.end(token)
         if any(isinstance(leaf, jax.core.Tracer)
                for leaf in jax.tree_util.tree_leaves(out)):
             # Under jit tracing no launch happened here — the elapsed time
@@ -278,6 +290,8 @@ def pallas_call(
             # this wrapper on later calls. Hooks observe eager launches
             # only; recording trace time would poison the cost EMA with
             # one sample orders of magnitude above steady state.
+            return out
+        if not hooks:
             return out
         jax.block_until_ready(out)
         event = LaunchEvent(
@@ -307,6 +321,25 @@ class LaunchEvent:
 _HOOKS: List[Callable[[LaunchEvent], None]] = []
 _TOKEN_HOOKS: dict = {}  # launch-context token -> [hooks]
 _HOOKS_LOCK = threading.Lock()
+
+# Process-global launch watchdog (core/faults.LaunchWatchdog or None).
+# Kernel launches are process-wide resources, so unlike the timing hooks
+# this seam is NOT token-scoped: any in-flight launch past its deadline is
+# worth flagging regardless of which executor issued it.
+_WATCHDOG = None
+
+
+def set_launch_watchdog(wd):
+    """Install the process-global launch watchdog; returns the previous
+    one (restore it when done — tests use try/finally)."""
+    global _WATCHDOG
+    prev = _WATCHDOG
+    _WATCHDOG = wd
+    return prev
+
+
+def current_launch_watchdog():
+    return _WATCHDOG
 
 # Thread-affine launch context: a worker/eddy thread tags itself with its
 # executor's token; token-scoped hooks fire only for launches made on

@@ -27,8 +27,11 @@ def rng():
 # barrier would linger silently. They get their own check — every shard
 # set must have wound down by session end (with a short grace period:
 # shards notice queue close/quiescence within SHARD_GET_TIMEOUT_S).
+# Launch-watchdog scan threads (core/faults.LaunchWatchdog, name
+# "fault-watchdog") are daemons too and must be stop()ped by executor
+# shutdown — a lingering one means a teardown path skipped it.
 # --------------------------------------------------------------------------- #
-_GUARDED_DAEMON_PREFIXES = ("eddy-shard-", "eddy-pull")
+_GUARDED_DAEMON_PREFIXES = ("eddy-shard-", "eddy-pull", "fault-watchdog")
 
 
 def _live_nondaemon_threads():

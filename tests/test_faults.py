@@ -1,0 +1,572 @@
+"""Fault-tolerance layer (core/faults.py + executor ``on_fault=``):
+deterministic injection schedules, pinned SimClock retry/backoff
+timelines, poison-batch and predicate quarantine, degrade-to-fallback,
+failure-aware routing, launch watchdog, and the teardown/termination
+regressions (tracker decrement on error paths, shard error no-hang,
+context-manager shutdown)."""
+import threading
+import time
+import types
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AQPExecutor,
+    CostDriven,
+    FaultConfig,
+    FaultLedger,
+    FaultPlan,
+    InjectedFault,
+    LaunchWatchdog,
+    Predicate,
+    ReuseCache,
+    SimClock,
+    UDF,
+    WallClock,
+    make_batch,
+)
+from repro.core.faults import backoff_delay
+from repro.core.stats import StatsBoard
+from repro.udfs.synthetic import planted_predicate
+
+
+def _pred(name, fn, resource="cpu", cost=None, fallback=None):
+    udf = UDF(name + "_udf", fn=fn, columns=("x",), resource=resource,
+              cost_model=cost, fallback_fn=fallback)
+    return Predicate(name, udf, compare=lambda out: out.astype(bool))
+
+
+def _batches(n_rows, per=10):
+    return [
+        make_batch({"x": np.arange(i, i + per, dtype=np.float64)},
+                   np.arange(i, i + per))
+        for i in range(0, n_rows, per)
+    ]
+
+
+def _rid_batches(n_rows, per=4):
+    return [
+        make_batch({"rid": np.arange(i, i + per)}, np.arange(i, i + per))
+        for i in range(0, n_rows, per)
+    ]
+
+
+def _multiset(batches):
+    return Counter(int(i) for b in batches for i in b.row_ids)
+
+
+def _collect_with_timeout(ex, source, timeout=30.0):
+    """Run collect() on a helper thread so a termination-barrier
+    regression FAILS the test instead of hanging the session."""
+    result = {}
+
+    def go():
+        try:
+            result["out"] = ex.collect(source)
+        except BaseException as e:  # re-raised on the test thread
+            result["err"] = e
+
+    t = threading.Thread(target=go, daemon=True)
+    t.start()
+    t.join(timeout)
+    assert not t.is_alive(), "executor did not terminate (hung run)"
+    if "err" in result:
+        raise result["err"]
+    return result["out"]
+
+
+# ------------------------------------------------------------------ #
+# FaultPlan: deterministic schedules
+# ------------------------------------------------------------------ #
+def test_fault_plan_attempt_schedule_and_counters():
+    plan = FaultPlan().fail("a", attempts=(1, 3))
+    p = _pred("a", lambda d: d["x"] >= 0)
+    data = {"x": np.arange(4, dtype=np.float64)}
+    clock = WallClock()
+    with pytest.raises(InjectedFault):
+        plan.invoke(p, data, clock)          # attempt 1: scheduled
+    out = plan.invoke(p, data, clock)        # attempt 2: clean
+    assert np.asarray(out).dtype == bool
+    with pytest.raises(InjectedFault):
+        plan.invoke(p, data, clock)          # attempt 3: scheduled
+    assert plan.attempt_count("a") == 3
+    assert plan.injected == 2
+
+
+def test_fault_plan_probabilistic_schedule_is_seeded():
+    def schedule(seed):
+        plan = FaultPlan(seed=seed).fail("p", probability=0.3)
+        spec = plan._specs["p"][0]
+        return [spec.triggers(a) for a in range(1, 41)]
+
+    s1 = schedule(7)
+    assert s1 == schedule(7)                 # bit-exact run to run
+    assert any(s1) and not all(s1)           # actually probabilistic
+    assert s1 != schedule(8)                 # seed matters
+
+
+def test_injected_hang_is_virtual_under_simclock():
+    plan = FaultPlan().hang("a", attempts=(1,), seconds=2.5)
+    p = _pred("a", lambda d: d["x"] >= 0)
+    data = {"x": np.arange(4, dtype=np.float64)}
+    t0 = time.perf_counter()
+    plan.invoke(p, data, SimClock())
+    assert time.perf_counter() - t0 < 1.0    # no wall sleep
+    assert plan.take_extra_cost() == 2.5     # deposited as virtual cost
+    assert plan.take_extra_cost() == 0.0     # consumed exactly once
+
+
+# ------------------------------------------------------------------ #
+# FaultConfig / backoff
+# ------------------------------------------------------------------ #
+def test_fault_config_resolution():
+    assert FaultConfig.resolve(None) is None
+    assert FaultConfig.resolve("fail_fast") is None
+    assert FaultConfig.resolve("retry").mode == "retry"
+    assert FaultConfig.resolve("degrade").mode == "degrade"
+    custom = FaultConfig(mode="retry", max_attempts=9)
+    assert FaultConfig.resolve(custom) is custom
+    with pytest.raises(ValueError):
+        FaultConfig.resolve("explode")
+    with pytest.raises(ValueError):
+        FaultConfig(mode="nope")
+    with pytest.raises(ValueError):
+        FaultConfig(max_attempts=0)
+
+
+def test_backoff_delay_caps_and_jitter_bounds():
+    cfg = FaultConfig(mode="retry", backoff_base_s=0.1, backoff_cap_s=0.25,
+                      jitter=0.0)
+    rng = np.random.default_rng(0)
+    assert backoff_delay(cfg, 1, rng) == 0.1
+    assert backoff_delay(cfg, 2, rng) == 0.2
+    assert backoff_delay(cfg, 3, rng) == 0.25      # capped
+    assert backoff_delay(cfg, 10, rng) == 0.25
+    jit = FaultConfig(mode="retry", backoff_base_s=0.1, backoff_cap_s=1.0,
+                      jitter=0.5)
+    ds = [backoff_delay(jit, 1, np.random.default_rng(s)) for s in range(20)]
+    assert all(0.1 <= d <= 0.15 + 1e-12 for d in ds)
+    assert len(set(ds)) > 1                        # jitter varies by stream
+    zero = FaultConfig(mode="retry", backoff_base_s=0.0)
+    assert backoff_delay(zero, 5, rng) == 0.0
+
+
+# ------------------------------------------------------------------ #
+# Retry: pinned SimClock timelines
+# ------------------------------------------------------------------ #
+def test_retry_backoff_timeline_pinned_simclock():
+    p = planted_predicate("P", range(100), cost_per_row=0.01)
+    plan = FaultPlan().fail("P", attempts=(1, 2))
+    cfg = FaultConfig(mode="retry", max_attempts=5, backoff_base_s=0.1,
+                      backoff_cap_s=1.0, jitter=0.0)
+    ex = AQPExecutor([p], clock=SimClock(), policy=CostDriven(),
+                     max_workers=1, warmup=False, on_fault=cfg,
+                     fault_plan=plan)
+    out = ex.collect(iter(_rid_batches(4, per=4)))
+    assert _multiset(out) == Counter(range(4))
+    # attempt 1 fails PRE-launch (no virtual cost), backoff 0.1; attempt 2
+    # fails, backoff 0.2; attempt 3 launches: 4 rows x 0.01 occupancy
+    assert ex.makespan == pytest.approx(0.1 + 0.2 + 0.04, abs=1e-9)
+    f = ex.stats_snapshot()["_faults"]["P"]
+    assert f["failures"] == 2 and f["retries"] == 2 and f["successes"] == 1
+    assert f["consecutive_failures"] == 0 and not f["quarantined"]
+    assert all(not b.passthrough for b in out)
+
+
+def test_seeded_jitter_run_to_run_deterministic():
+    def run():
+        p = planted_predicate("P", range(100), cost_per_row=0.01)
+        plan = FaultPlan(seed=3).fail("P", probability=0.4)
+        cfg = FaultConfig(mode="retry", max_attempts=4, backoff_base_s=0.05,
+                          backoff_cap_s=0.4, jitter=0.5, seed=11)
+        ex = AQPExecutor([p], clock=SimClock(), policy=CostDriven(),
+                         max_workers=1, warmup=False, on_fault=cfg,
+                         fault_plan=plan)
+        out = ex.collect(iter(_rid_batches(12, per=4)))
+        return (ex.makespan, sorted(_multiset(out).items()),
+                ex.stats_snapshot()["_faults"]["P"])
+
+    a, b = run(), run()
+    assert a == b                  # injected timeline is bit-exact
+    assert a[2]["failures"] > 0    # ... and faults actually fired
+
+
+def test_virtual_hang_and_posthoc_deadline():
+    p = planted_predicate("P", range(100), cost_per_row=0.01)
+    plan = FaultPlan().hang("P", attempts=(1,), seconds=5.0)
+    cfg = FaultConfig(mode="retry", launch_deadline_s=1.0,
+                      backoff_base_s=0.0, jitter=0.0)
+    ex = AQPExecutor([p], clock=SimClock(), policy=CostDriven(),
+                     max_workers=1, warmup=False, on_fault=cfg,
+                     fault_plan=plan)
+    assert ex._watchdog is None    # SimClock: post-hoc accounting instead
+    out = ex.collect(iter(_rid_batches(4, per=4)))
+    assert _multiset(out) == Counter(range(4))
+    assert ex.makespan == pytest.approx(5.0 + 0.04, abs=1e-9)
+    f = ex.stats_snapshot()["_faults"]["P"]
+    assert f["deadline_hits"] == 1
+    assert f["failures"] == 0 and f["successes"] == 1
+
+
+# ------------------------------------------------------------------ #
+# Poison batches, quarantine, degraded routing
+# ------------------------------------------------------------------ #
+def test_poison_batch_passthrough_after_max_attempts():
+    def fn(d):
+        if np.isin(13, d["rid"]):
+            raise ValueError("poison row")
+        return d["rid"] % 2 == 0
+
+    udf = UDF("pz", fn=fn, columns=("rid",), bucket=False)
+    p = Predicate("pz", udf, compare=lambda o: o.astype(bool))
+    cfg = FaultConfig(mode="retry", max_attempts=2, backoff_base_s=0.0,
+                      jitter=0.0, quarantine_after=10)
+    ex = AQPExecutor([p], max_workers=1, warmup=False, on_fault=cfg)
+    out = ex.collect(iter(_rid_batches(20, per=4)))
+    # evens survive the filter; the poison batch (rids 12..15) completes
+    # with the conservative pass-through verdict: ALL its rows kept
+    expected = Counter(
+        i for i in range(20) if i % 2 == 0 or i in (12, 13, 14, 15)
+    )
+    assert _multiset(out) == expected
+    poisoned = [b for b in out if "pz" in b.passthrough]
+    assert len(poisoned) == 1
+    assert set(map(int, poisoned[0].row_ids)) == {12, 13, 14, 15}
+    f = ex.stats_snapshot()["_faults"]["pz"]
+    assert f["quarantined_batches"] == 1 and f["quarantined_rows"] == 4
+    assert f["failures"] == 2 and f["retries"] == 1
+    assert not f["quarantined"]            # batch poisoned, predicate fine
+    assert f["error_rate"] > 0.0
+    assert "poison row" in f["last_error"]
+
+
+def test_quarantined_predicate_skipped_and_terminates():
+    a = planted_predicate("a", range(100), cost_per_row=0.01)
+    b = planted_predicate("b", range(0, 100, 2), cost_per_row=0.01)
+    plan = FaultPlan().fail("a", probability=1.0)
+    cfg = FaultConfig(mode="retry", max_attempts=2, quarantine_after=4,
+                      backoff_base_s=0.0, jitter=0.0)
+    ex = AQPExecutor([a, b], clock=SimClock(), policy=CostDriven(),
+                     max_workers=1, warmup=False, on_fault=cfg,
+                     fault_plan=plan)
+    out = _collect_with_timeout(ex, iter(_rid_batches(24, per=4)))
+    # "a" never produces a verdict -> conservative pass-through; "b" still
+    # filters: exact multiset = b's survivors, every batch flagged for "a"
+    assert _multiset(out) == Counter(range(0, 24, 2))
+    assert all("a" in bt.passthrough for bt in out)
+    f = ex.stats_snapshot()["_faults"]["a"]
+    assert f["quarantined"]
+    assert f["quarantined_batches"] >= 2   # the two that tripped quarantine
+    assert f["skipped_routes"] > 0         # later batches skipped at routing
+    assert ex.stats_snapshot()["_faults"]["b"]["failures"] == 0
+
+
+def test_warmup_with_always_failing_predicate_terminates():
+    """Warmup dispatches ONE batch per unmeasured predicate; a predicate
+    that always fails never measures — without the failed-predicate
+    exemption in the warmup gate every other batch circulates forever."""
+    a = planted_predicate("a", range(100), cost_per_row=0.01)
+    b = planted_predicate("b", range(0, 100, 2), cost_per_row=0.01)
+    plan = FaultPlan().fail("a", probability=1.0)
+    cfg = FaultConfig(mode="retry", max_attempts=2, quarantine_after=4,
+                      backoff_base_s=0.0, jitter=0.0)
+    ex = AQPExecutor([a, b], clock=SimClock(), policy=CostDriven(),
+                     max_workers=1, warmup=True, on_fault=cfg,
+                     fault_plan=plan)
+    out = _collect_with_timeout(ex, iter(_rid_batches(24, per=4)))
+    assert _multiset(out) == Counter(range(0, 24, 2))
+    assert all("a" in bt.passthrough for bt in out)
+    assert ex.stats_snapshot()["_faults"]["a"]["quarantined"]
+
+
+def test_degrade_switches_to_fallback():
+    calls = {"primary": 0, "fallback": 0}
+
+    def primary(d):
+        calls["primary"] += 1
+        raise RuntimeError("compiled path broken")
+
+    def fallback(d):
+        calls["fallback"] += 1
+        return d["x"] >= 0
+
+    p = _pred("a", primary, fallback=fallback)
+    cfg = FaultConfig(mode="degrade", max_attempts=4, degrade_after=2,
+                      backoff_base_s=0.0, jitter=0.0)
+    ex = AQPExecutor([p], max_workers=1, warmup=False, on_fault=cfg)
+    out = ex.collect(iter(_batches(10)))
+    assert _multiset(out) == Counter(range(10))
+    assert p.udf.degraded
+    assert calls["primary"] == 2           # degrade_after consecutive fails
+    assert calls["fallback"] >= 1
+    f = ex.stats_snapshot()["_faults"]["a"]
+    assert f["degraded"] and f["failures"] == 2 and f["successes"] == 1
+    assert all("a" not in bt.passthrough for bt in out)
+
+
+def test_degrade_escapes_compiled_only_injection():
+    """A compiled_only injected fault models a bug in the compiled
+    executable: once the UDF degrades to its reference path the spec
+    stops firing and evaluation recovers with correct results."""
+    p = _pred("a", lambda d: d["x"] >= 0, fallback=lambda d: d["x"] >= 0)
+    plan = FaultPlan().fail("a", probability=1.0)   # compiled_only default
+    cfg = FaultConfig(mode="degrade", max_attempts=6, degrade_after=2,
+                      backoff_base_s=0.0, jitter=0.0)
+    ex = AQPExecutor([p], max_workers=1, warmup=False, on_fault=cfg,
+                     fault_plan=plan)
+    out = ex.collect(iter(_batches(30)))
+    assert _multiset(out) == Counter(range(30))
+    assert p.udf.degraded
+    assert ex.stats_snapshot()["_faults"]["a"]["degraded"]
+    assert all("a" not in bt.passthrough for bt in out)
+
+
+def test_corrupt_output_detected_retried_and_not_cached():
+    p = _pred("a", lambda d: d["x"] >= 0)
+    plan = FaultPlan().corrupt("a", attempts=(2,))
+    cfg = FaultConfig(mode="retry", max_attempts=3, backoff_base_s=0.0,
+                      jitter=0.0)
+    cache = ReuseCache()
+    ex = AQPExecutor([p], max_workers=1, warmup=False, on_fault=cfg,
+                     fault_plan=plan, cache=cache)
+    out = ex.collect(iter(_batches(20)))    # 2 batches; attempt 2 corrupt
+    assert _multiset(out) == Counter(range(20))
+    f = ex.stats_snapshot()["_faults"]["a"]
+    assert f["failures"] == 1 and f["retries"] == 1
+    assert "CorruptOutputError" in f["last_error"]
+    # validation precedes caching: the complex128 result never entered
+    hits, vals = cache.probe_batch("a_udf", np.arange(10, 20))
+    assert hits.all()
+    assert all(np.asarray(v).dtype != np.complex128 for v in vals)
+    assert all(not b.passthrough for b in out)
+
+
+# ------------------------------------------------------------------ #
+# Failure-aware ranking
+# ------------------------------------------------------------------ #
+def test_rank_penalty_identity_until_first_failure():
+    led = FaultLedger(["a"])
+    assert led.rank_penalty("a") == 1.0
+    led.note_success("a")
+    assert led.rank_penalty("a") == 1.0 and not led.dirty
+    led.note_failure("a")
+    assert led.dirty and led.rank_penalty("a") > 1.0
+    led.note_success("a")                   # recovery decays the EMA...
+    r1 = led.rank_penalty("a")
+    led.note_success("a")
+    assert led.rank_penalty("a") < r1       # ...monotonically under success
+
+
+def test_failure_penalty_reorders_cost_ranking():
+    board = StatsBoard(["a", "b"])
+    board["a"].record_eval(10, 5, 0.1)      # 0.01/row: cheap, ranks first
+    board["b"].record_eval(10, 5, 0.4)      # 0.04/row
+    batch = _batches(10)[0]
+
+    class _P:
+        def __init__(self, name):
+            self.name = name
+
+    pa, pb = _P("a"), _P("b")
+    assert [p.name for p in
+            CostDriven().rank(batch, [pa, pb], board, None)] == ["a", "b"]
+    board.faults = FaultLedger(["a", "b"])
+    # clean ledger: penalty is exactly 1.0, ranking bit-identical
+    assert [p.name for p in
+            CostDriven().rank(batch, [pa, pb], board, None)] == ["a", "b"]
+    board.faults.note_failure("a")          # error-rate EMA -> 1.0, x5 key
+    assert [p.name for p in
+            CostDriven().rank(batch, [pa, pb], board, None)] == ["b", "a"]
+
+
+def test_fail_fast_modes_share_one_pinned_timeline():
+    """Default, explicit fail_fast, and retry-with-no-faults must produce
+    the identical deterministic timeline and statistics."""
+    def run(**kw):
+        p = planted_predicate("P", range(0, 64, 2), cost_per_row=0.01)
+        ex = AQPExecutor([p], clock=SimClock(), policy=CostDriven(),
+                         max_workers=1, warmup=False, **kw)
+        out = ex.collect(iter(_rid_batches(32, per=4)))
+        snap = ex.stats_snapshot()
+        return (ex.makespan, sorted(_multiset(out).items()), snap["P"])
+
+    base = run()
+    assert run(on_fault="fail_fast") == base
+    assert run(on_fault="retry") == base    # no faults -> byte-identical
+    assert base[0] == pytest.approx(8 * 4 * 0.01, abs=1e-9)
+
+
+# ------------------------------------------------------------------ #
+# LaunchWatchdog
+# ------------------------------------------------------------------ #
+def test_watchdog_scan_flags_overdue_launch_once():
+    hits = []
+    wd = LaunchWatchdog(0.5, lambda name, el: hits.append((name, el)))
+    tok = wd.begin("k")
+    now = time.monotonic()
+    assert wd.scan(now=now + 1.0) == 1
+    assert wd.scan(now=now + 2.0) == 0      # flagged exactly once
+    assert hits and hits[0][0] == "k" and hits[0][1] > 0.5
+    wd.end(tok)
+    assert wd.inflight() == 0
+    assert wd.began == 1 and wd.flagged == 1
+
+
+def test_watchdog_callback_exception_swallowed():
+    def boom(name, elapsed):
+        raise RuntimeError("observer crashed")
+
+    wd = LaunchWatchdog(0.1, boom)
+    tok = wd.begin("k")
+    assert wd.scan(now=time.monotonic() + 1.0) == 1   # no raise
+    wd.end(tok)
+
+
+def test_watchdog_thread_lifecycle():
+    wd = LaunchWatchdog(10.0, lambda n, e: None, interval_s=0.01)
+    wd.start()
+    assert any(t.name == "fault-watchdog" and t.is_alive()
+               for t in threading.enumerate())
+    wd.stop()
+    assert not any(t.name == "fault-watchdog" and t.is_alive()
+                   for t in threading.enumerate())
+
+
+def test_launch_watchdog_seam_brackets_kernel_launches(rng):
+    import jax.numpy as jnp
+
+    from repro.kernels import launch, ops
+
+    wd = LaunchWatchdog(30.0, lambda n, e: None)
+    prev = launch.set_launch_watchdog(wd)
+    try:
+        crops = jnp.asarray(rng.uniform(0, 255, (4, 32, 16, 3)), jnp.float32)
+        ops.hsv_color_classify(crops, impl="pallas", block_rows=16)
+    finally:
+        launch.set_launch_watchdog(prev)
+    assert wd.began >= 1                   # the launch was bracketed
+    assert wd.inflight() == 0              # ... and unbracketed on return
+    assert launch.current_launch_watchdog() is prev
+
+
+def test_executor_starts_and_stops_watchdog_wall_clock():
+    p = _pred("a", lambda d: d["x"] >= 0)
+    cfg = FaultConfig(mode="retry", launch_deadline_s=5.0)
+    ex = AQPExecutor([p], max_workers=1, warmup=False, on_fault=cfg)
+    assert ex._watchdog is not None
+    out = ex.collect(iter(_batches(10)))
+    assert _multiset(out) == Counter(range(10))
+    assert ex._watchdog.began >= 1         # worker evaluations bracketed
+    # shutdown (run()'s finally) joined the scan thread
+    assert ex._watchdog._thread is None
+    assert not any(t.name == "fault-watchdog" and t.is_alive()
+                   for t in threading.enumerate())
+
+
+# ------------------------------------------------------------------ #
+# Teardown / termination-barrier regressions
+# ------------------------------------------------------------------ #
+def test_tracker_decremented_on_worker_error():
+    def boom(d):
+        raise ValueError("kaboom")
+
+    ex = AQPExecutor([_pred("a", boom)], max_workers=1, warmup=False)
+    with pytest.raises(RuntimeError, match="predicate worker failed"):
+        _collect_with_timeout(ex, iter(_batches(10)))
+    assert ex._tracker.value() == 0        # dropped batch was untracked
+
+
+def test_policy_error_in_shard_fails_promptly_not_hang():
+    """Pre-fix: a shard that died routing a batch left the in-flight count
+    wedged and sibling shards polled forever."""
+    class Boom(CostDriven):
+        def __init__(self):
+            self.calls = 0
+
+        def rank(self, batch, preds, stats, cache):
+            self.calls += 1
+            if self.calls >= 3:
+                raise RuntimeError("policy boom")
+            return super().rank(batch, preds, stats, cache)
+
+    pa = _pred("a", lambda d: d["x"] >= 0)
+    pb = _pred("b", lambda d: d["x"] >= 0)
+    ex = AQPExecutor([pa, pb], policy=Boom(), shards=2, warmup=False,
+                     max_workers=1)
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="policy boom"):
+        _collect_with_timeout(ex, iter(_batches(60)), timeout=20.0)
+    assert time.monotonic() - t0 < 15.0    # prompt abort, not a poll-out
+
+
+def test_eddy_submit_guard_raises_on_falsy_return():
+    from repro.core.eddy import EddyShard
+
+    class FakeLam:
+        pred = types.SimpleNamespace(name="p")
+
+        def submit(self, b):
+            return False                   # contract violation
+
+    class FakeBatch:
+        bid = 7
+
+    with pytest.raises(RuntimeError, match="rejected batch"):
+        EddyShard._submit(FakeLam(), FakeBatch())
+
+
+class _SpyStore:
+    def __init__(self):
+        self.recorded = 0
+        self.flushed = 0
+
+    def warm_start(self, board, preds):
+        return {}
+
+    def record_board(self, board, preds, seeded=None):
+        self.recorded += 1
+
+    def flush(self):
+        self.flushed += 1
+
+
+def test_context_manager_teardown_on_error():
+    from repro.kernels import launch as kernel_launch
+
+    def boom(d):
+        raise ValueError("kaboom")
+
+    store = _SpyStore()
+    with AQPExecutor([_pred("a", boom)], max_workers=1, warmup=False,
+                     stats_store=store) as ex:
+        with pytest.raises(RuntimeError, match="predicate worker failed"):
+            _collect_with_timeout(ex, iter(_batches(10)))
+    # the raise went through shutdown(): stats recorded, hook deregistered
+    assert store.recorded == 1 and store.flushed == 1
+    assert ex._launch_token not in kernel_launch._TOKEN_HOOKS
+
+
+def test_context_manager_closes_abandoned_run():
+    p = _pred("a", lambda d: d["x"] >= 0)
+    with AQPExecutor([p], max_workers=1, warmup=False) as ex:
+        it = ex.run(iter(_batches(40)))
+        next(it)                           # abandon the generator mid-run
+    assert ex._kernel_hook is None         # __exit__ ran shutdown()
+    del it
+
+
+def test_faults_snapshot_key_contract():
+    p = _pred("a", lambda d: d["x"] >= 0)
+    plan = FaultPlan().fail("a", attempts=(1,))
+    ex = AQPExecutor([p], max_workers=1, warmup=False, on_fault="retry",
+                     fault_plan=plan)
+    ex.collect(iter(_batches(10)))
+    f = ex.stats_snapshot()["_faults"]["a"]
+    assert set(f) == {
+        "failures", "successes", "retries", "consecutive_failures",
+        "error_rate", "quarantined", "degraded", "quarantined_batches",
+        "quarantined_rows", "deadline_hits", "skipped_routes", "last_error",
+    }
+    assert f["failures"] == 1 and f["successes"] == 1
