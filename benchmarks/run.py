@@ -23,6 +23,7 @@ from benchmarks import (  # noqa: E402
     bench_content_routing,
     bench_kernels,
     bench_routing_throughput,
+    bench_serve,
     bench_uc1_routing,
     bench_uc1_synthetic,
     bench_uc2_reuse,
@@ -43,6 +44,7 @@ SUITES = {
     "routing": bench_routing_throughput.main,  # sharded eddy core scaling
     "coalescing": bench_coalescing.main,    # adaptive micro-batch fusing
     "chaos": bench_chaos.main,              # fault injection + retry gates
+    "serve": bench_serve.main,              # multi-tenant QueryService goodput
 }
 
 

@@ -20,9 +20,14 @@ Public surface:
   SimClock / WallClock               — deterministic scheduling evaluation
   CoalesceConfig / CoalescePlanner   — §5.1 adaptive micro-batch coalescing
     (fuse queued batches into one launch; executor knob ``coalesce=``)
-  FaultPlan / FaultLedger / FaultConfig / LaunchWatchdog — fault injection,
-    per-predicate failure statistics, retry/degrade/quarantine policy, and
-    hung-launch detection (executor knob ``on_fault=``; see core/faults.py)
+  FaultPlan / FaultLedger / FaultConfig / LaunchWatchdog / ReverifyQueue —
+    fault injection, per-predicate failure statistics (with recovery
+    probes un-quarantining on success), retry/degrade/quarantine policy,
+    hung-launch detection, and the pass-through re-verification queue
+    (executor knobs ``on_fault=`` / ``reverify=``; see core/faults.py)
+  QuerySession / urgency_weight      — restartable per-query sessions and
+    deadline/priority arbitration urgency (multi-tenant QueryService —
+    the serving layer itself lives in repro.launch.serve)
   vectorized (two_stage_filter / cascade_filter) — TPU-native short-circuit
 """
 from repro.core.batch import (  # noqa: F401
@@ -49,7 +54,7 @@ from repro.core.eddy import (  # noqa: F401
     EddyShardSet,
     InFlightTracker,
 )
-from repro.core.executor import AQPExecutor  # noqa: F401
+from repro.core.executor import AQPExecutor, QuerySession  # noqa: F401
 from repro.core.faults import (  # noqa: F401
     CorruptOutputError,
     FaultConfig,
@@ -57,9 +62,16 @@ from repro.core.faults import (  # noqa: F401
     FaultPlan,
     InjectedFault,
     LaunchWatchdog,
+    ReverifyQueue,
 )
 from repro.core.laminar import GACU_MAX_WORKERS, LaminarRouter  # noqa: F401
-from repro.core.plan import PhysicalPlan, Query, TrivialPredicate, optimize  # noqa: F401
+from repro.core.plan import (  # noqa: F401
+    PhysicalPlan,
+    Query,
+    TrivialPredicate,
+    batches_of,
+    optimize,
+)
 from repro.core.policies import (  # noqa: F401
     ArbiterPolicy,
     CostDriven,
@@ -72,6 +84,7 @@ from repro.core.policies import (  # noqa: F401
     ScoreDriven,
     SelectivityDriven,
     StaticPartition,
+    urgency_weight,
 )
 from repro.core.queues import BoundedQueue, CentralQueue  # noqa: F401
 from repro.core.resources import (  # noqa: F401

@@ -83,6 +83,13 @@ class RoutingBatch:
         return replace(self, visited=self.visited | {predicate},
                        passthrough=self.passthrough | {predicate})
 
+    def clear_passthrough(self, predicate: str) -> "RoutingBatch":
+        """Lift ``predicate``'s conservative flag after re-verification
+        (core/faults.py ReverifyQueue): the caller has ACTUALLY evaluated
+        the predicate on these rows and will apply the real filter —
+        ``visited`` is untouched, only the audit flag drops."""
+        return replace(self, passthrough=self.passthrough - {predicate})
+
     def filter(self, mask: np.ndarray) -> "RoutingBatch":
         """Eager materialization: keep only rows where mask is True."""
         mask = np.asarray(mask, bool)

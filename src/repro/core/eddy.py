@@ -183,8 +183,15 @@ class EddyShard(threading.Thread):
             if skipped:
                 # failure-aware skip: a fully-quarantined predicate gets
                 # the conservative pass-through verdict at ROUTING time —
-                # the decision is logged per predicate in the ledger
+                # the decision is logged per predicate in the ledger.
+                # Exception: an armed recovery probe
+                # (FaultConfig.probe_after_skips) claims ONE batch and
+                # routes it AT the quarantined predicate instead — probe
+                # success un-quarantines it (see faults.py).
                 for p in skipped:
+                    if ledger.take_probe_route(p.name):
+                        self._submit(core.laminars[p.name], batch)
+                        return
                     batch = batch.mark_passthrough(p.name)
                     ledger.note_skip(p.name)
                 remaining = [p for p in remaining

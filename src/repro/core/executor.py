@@ -84,7 +84,9 @@ from repro.core.eddy import (
     SHARD_AUTO_MAX, SHARD_AUTO_THRESHOLD_BPS, EddyPull, EddyShardSet,
     InFlightTracker,
 )
-from repro.core.faults import FaultConfig, FaultLedger, LaunchWatchdog
+from repro.core.faults import (
+    FaultConfig, FaultLedger, LaunchWatchdog, ReverifyQueue,
+)
 from repro.core.laminar import GACU_MAX_WORKERS, LaminarRouter
 from repro.core.policies import (
     ArbiterPolicy, EddyPolicy, HydroPolicy, LaminarPolicy, RoundRobin,
@@ -126,6 +128,9 @@ class AQPExecutor:
         worker_queue_capacity: Optional[int] = None,
         on_fault="fail_fast",
         fault_plan=None,
+        query: Optional[str] = None,
+        reverify: bool = False,
+        virtual_drain: bool = False,
     ):
         self.predicates = predicates
         self.policy = policy or HydroPolicy()
@@ -174,8 +179,27 @@ class AQPExecutor:
         self.faults = FaultLedger(
             [p.name for p in predicates],
             seed=self.fault_config.seed if self.fault_config else 0,
+            probe_after_skips=(
+                self.fault_config.probe_after_skips
+                if self.fault_config else None
+            ),
         )
         self.stats.faults = self.faults
+        # Multi-tenancy (launch/serve.py): the query identity tags this
+        # executor's registrations in a shared arbiter; service_info is
+        # filled in by a managing QueryService and surfaced under the
+        # stats_snapshot() "_service" key.
+        self.query = query
+        self.service_info: Optional[Dict[str, object]] = None
+        # Re-verification queue (core/faults.py): with reverify=True the
+        # run loop holds pass-through-flagged output batches and drains
+        # them back through each flagged predicate once it recovers;
+        # unrecovered flags release as-is at end of run.
+        self.reverify_queue = (
+            ReverifyQueue(predicates, self.faults,
+                          fault_plan=self.fault_plan, clock=self.clock)
+            if reverify else None
+        )
         self._watchdog = None
         if (self.fault_config is not None
                 and self.fault_config.launch_deadline_s is not None
@@ -240,6 +264,8 @@ class AQPExecutor:
                     on_error=self._on_worker_error,
                     arbiter=self.arbiter,
                     drain_threshold=drain_threshold,
+                    virtual_drain=virtual_drain,
+                    query=query,
                     launch_token=self._launch_token,
                     coalesce=self.coalesce_config,
                     worker_queue_capacity=worker_queue_capacity,
@@ -325,13 +351,30 @@ class AQPExecutor:
         try:
             while True:
                 try:
-                    yield self.output.get(timeout=1.0)
+                    out = self.output.get(timeout=1.0)
                 except TimeoutError:
                     if self._worker_error is not None:
                         break
                     continue
                 except ClosedError:
                     break
+                if self.reverify_queue is None:
+                    yield out
+                    continue
+                # re-verification (core/faults.py): flagged batches are
+                # held; recovered predicates' holds drain opportunistically
+                out = self.reverify_queue.offer(out)
+                if out is not None:
+                    yield out
+                if self.reverify_queue.pending():
+                    for b in self.reverify_queue.drain():
+                        yield b
+            if self.reverify_queue is not None:
+                # end of run: release still-held batches — re-verified
+                # where the predicate recovered, still-flagged otherwise
+                # (the pre-reverify conservative contract)
+                for b in self.reverify_queue.drain(force=True):
+                    yield b
         finally:
             self.shutdown()
         if self._worker_error is not None:
@@ -390,11 +433,24 @@ class AQPExecutor:
         ``"_routing"`` the shard-set picture (active shards, steals,
         circulations, completed), and ``"_faults"`` the per-predicate
         fault ledger (see core/faults.FaultLedger.snapshot for the key
-        contract). Consumers iterating predicate entries should skip
-        ``_``-keys."""
+        contract). The reserved ``"_service"`` key carries the
+        multi-tenant picture: ``{"managed": False}`` for a standalone
+        executor, or the managing QueryService's per-query identity
+        (query id, priority, deadline — see launch/serve.py) when this
+        executor runs as a service tenant; with ``reverify=True`` it also
+        carries the re-verification counters
+        (``ReverifyQueue.snapshot``). Consumers iterating predicate
+        entries should skip ``_``-keys."""
         snap = self.stats.snapshot()
         snap["_arbiter"] = self.arbiter.counters()
         snap["_faults"] = self.faults.snapshot()
+        svc: Dict[str, object] = (
+            dict(self.service_info) if self.service_info
+            else {"managed": False}
+        )
+        if self.reverify_queue is not None:
+            svc["reverify"] = self.reverify_queue.snapshot()
+        snap["_service"] = svc
         r = self._router
         snap["_routing"] = {
             "shards_active": r.shards_active if r is not None else 0,
@@ -436,3 +492,42 @@ class AQPExecutor:
     def makespan(self) -> float:
         """Simulated-clock makespan (SimClock only)."""
         return getattr(self.clock, "makespan", 0.0)
+
+
+class QuerySession:
+    """Restartable per-query session over a (possibly shared) arbiter.
+
+    ``AQPExecutor`` is one-shot by design: ``shutdown()`` closes its
+    queues, so a second ``run()`` on the same instance cannot work. A
+    ``QuerySession`` is the restartable object the multi-tenant service
+    holds instead: it captures the predicates and executor configuration
+    once, and every ``run()`` builds a FRESH executor, streams its
+    output, and GUARANTEES teardown (context-manager + finally) even if
+    the consumer abandons the iterator or an evaluation fails — the
+    arbiter registration is released, so the same predicate names are
+    re-registerable for the next run and the shared DevicePool never
+    leaks slots. The final ``stats_snapshot()`` of each run is kept in
+    ``last_snapshot`` for telemetry."""
+
+    def __init__(self, predicates: List[Predicate], **executor_kwargs):
+        self.predicates = predicates
+        self.executor_kwargs = executor_kwargs
+        self.runs = 0
+        self.executor: Optional[AQPExecutor] = None  # live during run()
+        self.last_snapshot = None
+
+    def run(self, source: Iterable[RoutingBatch]) -> Iterator[RoutingBatch]:
+        """One full query execution on a fresh executor; restartable."""
+        ex = AQPExecutor(self.predicates, **self.executor_kwargs)
+        self.executor = ex
+        self.runs += 1
+        try:
+            with ex:
+                for b in ex.run(source):
+                    yield b
+        finally:
+            self.last_snapshot = ex.stats_snapshot()
+            self.executor = None
+
+    def collect(self, source: Iterable[RoutingBatch]) -> List[RoutingBatch]:
+        return list(self.run(source))

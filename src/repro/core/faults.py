@@ -213,7 +213,15 @@ class FaultConfig:
     the delay advances the batch's VIRTUAL ready time (never a wall
     sleep).  ``launch_deadline_s`` arms deadline detection: post-hoc
     virtual turnaround under SimClock, the ``LaunchWatchdog`` thread
-    under a wall clock."""
+    under a wall clock.
+
+    ``probe_after_skips`` (None = off, the pre-probe behavior: quarantine
+    is permanent within a run) arms RECOVERY PROBES: after that many
+    routing-level skips of a quarantined predicate, the eddy routes ONE
+    probe batch to it (``FaultLedger.take_probe_route``).  The probe gets
+    a single attempt — success un-quarantines the predicate
+    (``clear_quarantine``) and normal routing resumes; failure re-arms
+    the skip counter so the next probe waits another full window."""
 
     mode: str = "retry"
     max_attempts: int = 3
@@ -224,6 +232,7 @@ class FaultConfig:
     degrade_after: int = 2
     quarantine_after: int = 6
     launch_deadline_s: Optional[float] = None
+    probe_after_skips: Optional[int] = None
 
     def __post_init__(self):
         if self.mode not in ("retry", "degrade"):
@@ -231,6 +240,8 @@ class FaultConfig:
                              f"got {self.mode!r}")
         if self.max_attempts < 1:
             raise ValueError("max_attempts must be >= 1")
+        if self.probe_after_skips is not None and self.probe_after_skips < 1:
+            raise ValueError("probe_after_skips must be >= 1 (or None)")
 
     @classmethod
     def resolve(cls, on_fault) -> Optional["FaultConfig"]:
@@ -277,6 +288,16 @@ class PredicateFaultState:
     quarantined_rows: int = 0
     deadline_hits: int = 0
     skipped_routes: int = 0
+    # recovery-probe state machine (FaultConfig.probe_after_skips):
+    # skips arm probe_pending -> the eddy claims it (take_probe_route,
+    # probe_inflight) -> the worker claims the single attempt
+    # (begin_probe) -> end_probe either clears the quarantine or re-arms
+    # the skip window
+    skips_since_probe: int = 0
+    probe_pending: bool = False
+    probe_inflight: bool = False
+    probes: int = 0
+    unquarantines: int = 0
     last_error: str = ""
     error_rate: Ema = field(
         default_factory=lambda: Ema(FAULT_EMA_ALPHA)
@@ -293,8 +314,10 @@ class FaultLedger:
     until the first failure is recorded, so a fault-free run's rank keys
     are bit-identical to a ledger-less build (x * 1.0 == x)."""
 
-    def __init__(self, predicate_names: Iterable[str] = (), *, seed: int = 0):
+    def __init__(self, predicate_names: Iterable[str] = (), *, seed: int = 0,
+                 probe_after_skips: Optional[int] = None):
         self.seed = seed
+        self.probe_after_skips = probe_after_skips
         self._lock = threading.Lock()
         self._entries: Dict[str, PredicateFaultState] = {}
         # lock-free fast-path flags (GIL-atomic bool reads)
@@ -366,6 +389,12 @@ class FaultLedger:
         st = self._entry(name)
         with self._lock:
             st.skipped_routes += 1
+            if (self.probe_after_skips is not None and st.quarantined
+                    and not st.probe_pending and not st.probe_inflight):
+                st.skips_since_probe += 1
+                if st.skips_since_probe >= self.probe_after_skips:
+                    st.probe_pending = True
+                    st.skips_since_probe = 0
 
     def set_quarantined(self, name: str) -> bool:
         """Quarantine ``name``; returns True if newly quarantined."""
@@ -374,8 +403,71 @@ class FaultLedger:
             if st.quarantined:
                 return False
             st.quarantined = True
+            st.skips_since_probe = 0
+            st.probe_pending = False
+            st.probe_inflight = False
             self.has_quarantined = True
             return True
+
+    def clear_quarantine(self, name: str) -> bool:
+        """Lift ``name``'s quarantine (probe success); returns True if it
+        was quarantined.  Resets the consecutive-failure streak so the
+        next real failure starts a fresh window rather than instantly
+        re-quarantining."""
+        st = self._entry(name)
+        with self._lock:
+            if not st.quarantined:
+                return False
+            st.quarantined = False
+            st.consecutive_failures = 0
+            st.skips_since_probe = 0
+            st.probe_pending = False
+            st.probe_inflight = False
+            st.unquarantines += 1
+            self.has_quarantined = any(
+                s.quarantined for s in self._entries.values()
+            )
+            return True
+
+    # ------------------------- recovery probes ------------------------- #
+    def take_probe_route(self, name: str) -> bool:
+        """Eddy-side claim: route ONE batch to quarantined ``name`` as a
+        recovery probe instead of skipping it.  At most one probe is in
+        flight per predicate; returns True exactly once per armed probe."""
+        st = self._entry(name)
+        with self._lock:
+            if not (st.quarantined and st.probe_pending):
+                return False
+            st.probe_pending = False
+            st.probe_inflight = True
+            st.probes += 1
+            return True
+
+    def begin_probe(self, name: str) -> bool:
+        """Worker-side claim of the in-flight probe: the caller must give
+        the quarantined predicate exactly ONE evaluation attempt (no
+        retries) and report the outcome via ``end_probe``.  Returns False
+        for any non-probe batch that raced into a quarantined predicate's
+        queue (those pass through as before)."""
+        st = self._entry(name)
+        with self._lock:
+            if not st.probe_inflight:
+                return False
+            st.probe_inflight = False
+            return True
+
+    def end_probe(self, name: str, success: bool) -> bool:
+        """Probe outcome: success lifts the quarantine (returns True);
+        failure re-arms the skip window so the next probe waits another
+        full ``probe_after_skips`` skips."""
+        if success:
+            return self.clear_quarantine(name)
+        st = self._entry(name)
+        with self._lock:
+            st.skips_since_probe = 0
+            st.probe_pending = False
+            st.probe_inflight = False
+            return False
 
     # ------------------------- reading ------------------------- #
     def is_quarantined(self, name: str) -> bool:
@@ -438,6 +530,8 @@ class FaultLedger:
         deadline_hits — launches past ``launch_deadline_s``;
         skipped_routes — routing decisions that skipped this predicate
         because it was quarantined;
+        probes — recovery probes routed (``probe_after_skips`` armed);
+        unquarantines — quarantines lifted by a probe success;
         last_error — repr of the most recent failure."""
         with self._lock:
             return {
@@ -453,6 +547,8 @@ class FaultLedger:
                     "quarantined_rows": st.quarantined_rows,
                     "deadline_hits": st.deadline_hits,
                     "skipped_routes": st.skipped_routes,
+                    "probes": st.probes,
+                    "unquarantines": st.unquarantines,
                     "last_error": st.last_error,
                 }
                 for n, st in self._entries.items()
@@ -541,3 +637,132 @@ class LaunchWatchdog:
         if t is not None:
             t.join(timeout=2.0)
             self._thread = None
+
+
+class ReverifyQueue:
+    """Drains conservative pass-through verdicts once a predicate recovers.
+
+    Quarantine / poison-batch completion keeps every row (flagged in
+    ``batch.passthrough``) so the termination barrier and row-id-multiset
+    invariants hold — but the flagged rows were never actually FILTERED by
+    the flagged predicate.  With the executor knob ``reverify=True`` the
+    run loop intercepts flagged output batches here instead of emitting
+    them; ``drain()`` re-evaluates each held batch through every flagged
+    predicate that has since RECOVERED (not quarantined, current streak
+    clean, at least one recorded success — e.g. after a probe
+    un-quarantine), clears the flag (``batch.clear_passthrough``), and
+    applies the real row filter.  A predicate that never recovers within
+    the run releases its batches still-flagged at the final forced drain,
+    preserving the conservative contract.
+
+    Re-verification runs on the executor's OWN thread (offer/drain are
+    called from the run loop, never from workers) and deliberately
+    bypasses the cache and SimClock occupancy: it is an audit path, not
+    the measured hot path, and the held batches already completed —
+    re-evaluation must not perturb pinned virtual timelines.  Failures
+    during re-verification are recorded in the ledger like any other
+    attempt and leave the flag in place."""
+
+    def __init__(self, predicates, ledger: FaultLedger,
+                 *, fault_plan: Optional[FaultPlan] = None,
+                 clock: Optional[object] = None):
+        self._preds = {p.name: p for p in predicates}
+        self.ledger = ledger
+        self.fault_plan = fault_plan
+        self.clock = clock
+        self._held: list = []
+        self._lock = threading.Lock()
+        self.intercepted = 0
+        self.reverified_batches = 0
+        self.reverified_rows = 0
+        self.dropped_rows = 0
+        self.released_flagged = 0
+
+    def offer(self, batch):
+        """Intercept ``batch`` if it carries pass-through flags; returns
+        the batch unchanged when clean, None when held for re-verify."""
+        if not batch.passthrough:
+            return batch
+        with self._lock:
+            self._held.append(batch)
+            self.intercepted += 1
+        return None
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._held)
+
+    def _recovered(self, name: str) -> bool:
+        st = self.ledger.entry(name)
+        with self.ledger._lock:
+            return (not st.quarantined and st.consecutive_failures == 0
+                    and st.successes > 0)
+
+    def _reverify_one(self, pred, batch):
+        """One single-attempt re-evaluation; None on failure (flag kept)."""
+        data = {c: batch.data[c] for c in pred.udf.columns}
+        try:
+            if self.fault_plan is not None:
+                outputs = self.fault_plan.invoke(pred, data, self.clock)
+                self.fault_plan.take_extra_cost()  # discard virtual hangs
+            else:
+                outputs = pred.evaluate_outputs(data)
+            out = np.asarray(outputs)
+            if out.ndim == 0 or out.shape[0] != batch.rows:
+                raise CorruptOutputError(
+                    f"{pred.name}: reverify expected {batch.rows} output "
+                    f"rows, got shape {out.shape}"
+                )
+        except Exception as e:
+            self.ledger.note_failure(pred.name, error=e)
+            return None
+        self.ledger.note_success(pred.name)
+        mask = pred.mask_from_outputs(out)
+        refined = batch.clear_passthrough(pred.name).filter(mask)
+        self.reverified_rows += batch.rows
+        self.dropped_rows += batch.rows - refined.rows
+        return refined
+
+    def drain(self, *, force: bool = False) -> list:
+        """Re-verify held batches whose flagged predicates recovered.
+
+        Returns the batches ready for release: fully re-verified ones
+        (flags cleared, rows filtered) and — under ``force=True``, the
+        end-of-run flush — still-flagged batches released as-is (the
+        pre-reverify conservative contract).  Batches with unrecovered
+        flags stay held unless forced."""
+        with self._lock:
+            held, self._held = self._held, []
+        out, keep = [], []
+        for batch in held:
+            for name in sorted(batch.passthrough):
+                pred = self._preds.get(name)
+                if pred is None or not self._recovered(name):
+                    continue
+                refined = self._reverify_one(pred, batch)
+                if refined is not None:
+                    batch = refined
+                    self.reverified_batches += 1
+            if batch.passthrough and not force:
+                keep.append(batch)
+            else:
+                if batch.passthrough:
+                    self.released_flagged += 1
+                out.append(batch)
+        if keep:
+            with self._lock:
+                self._held = keep + self._held
+        return out
+
+    def snapshot(self) -> Dict[str, int]:
+        """Exported under ``stats_snapshot()["_service"]`` /
+        per-query telemetry."""
+        with self._lock:
+            return {
+                "pending": len(self._held),
+                "intercepted": self.intercepted,
+                "reverified_batches": self.reverified_batches,
+                "reverified_rows": self.reverified_rows,
+                "dropped_rows": self.dropped_rows,
+                "released_flagged": self.released_flagged,
+            }

@@ -48,6 +48,13 @@ GACU_MAX_WORKERS = 50  # paper's hardcoded per-device ceiling
 _FLOOR_RETRY_SLEEP_S = 0.01
 FLOOR_STARVATION_DEADLINE_S = 10.0
 
+# Wall poll interval for the VIRTUAL-idle drain path (``virtual_drain=``):
+# under SimClock the retire *decision* reads only virtual state (the
+# router's observed virtual frontier vs the worker's busy horizon), so the
+# wall-clock poll cadence cannot change WHICH workers retire — only how
+# promptly the deterministic verdict is acted on.
+_VIRTUAL_DRAIN_POLL_S = 0.02
+
 
 class LaminarRouter:
     def __init__(
@@ -73,6 +80,8 @@ class LaminarRouter:
         fault_config=None,
         watchdog=None,
         tracker=None,
+        virtual_drain: bool = False,
+        query: Optional[str] = None,
     ):
         self.pred = pred
         self.stats = stats
@@ -90,12 +99,25 @@ class LaminarRouter:
             if coalesce is not None else None
         )
         self._worker_queue_capacity = max(1, worker_queue_capacity)
+        self._virtual_drain = bool(virtual_drain) and isinstance(clock, SimClock)
+        idle_timeout = drain_threshold
         if isinstance(clock, SimClock):
-            # wall-clock queue idleness is meaningless in virtual time and
-            # would make the deterministic timelines depend on real thread
-            # scheduling: scale-down is wall-clock-only (a virtual-idle
-            # drain path is future work — see ROADMAP)
-            drain_threshold = None
+            if self._virtual_drain and drain_threshold is not None:
+                # virtual-idle drain: the threshold is measured in VIRTUAL
+                # seconds of horizon idleness (_on_worker_idle reads the
+                # SimClock, never the wall), so deterministic benchmarks
+                # exercise scale-down too; the worker's wall idle_timeout
+                # becomes just a poll cadence for the virtual verdict
+                idle_timeout = _VIRTUAL_DRAIN_POLL_S
+            else:
+                # wall-clock queue idleness is meaningless in virtual time
+                # and would make the deterministic timelines depend on real
+                # thread scheduling: scale-down stays off under SimClock
+                # unless virtual_drain= opts in
+                drain_threshold = None
+                idle_timeout = None
+        self._drain_threshold = drain_threshold
+        self._sim_frontier = 0.0  # latest virtual arrival seen by submit
         self._lock = threading.RLock()
         self._active: List[WorkerContext] = []
 
@@ -111,7 +133,7 @@ class LaminarRouter:
                 device_group=devices[i % len(devices)],
                 serial_fraction=serial_fraction,
                 on_error=on_error,
-                idle_timeout=drain_threshold,
+                idle_timeout=idle_timeout,
                 on_idle=self._on_worker_idle,
                 launch_token=launch_token,
                 coalesce=self.coalesce_planner,
@@ -131,7 +153,7 @@ class LaminarRouter:
         # but never-run executor must not hold shared-pool capacity.
         self._contexts = self.arbiter.register(
             pred.name, num_workers=self.max_workers,
-            factory=_factory, stats=stats, clock=clock,
+            factory=_factory, stats=stats, clock=clock, query=query,
         )
 
     # ------------------------------------------------------------------ #
@@ -174,6 +196,16 @@ class LaminarRouter:
                 return False  # a submit is in flight toward this worker
             if len(w.queue) > 0:
                 return False  # a batch raced in: keep serving
+            if self._virtual_drain:
+                # deterministic verdict: retire only when the worker's
+                # virtual busy horizon lags the router's observed virtual
+                # frontier by at least the drain threshold — i.e. it has
+                # been idle that long in SIMULATED time, regardless of
+                # wall-clock thread scheduling
+                idle_v = self._sim_frontier \
+                    - self.clock.resource_busy_until(w.wid)
+                if idle_v < self._drain_threshold:
+                    return False
             self._active.remove(w)
             w.activated = False     # re-leasable: activate() restarts
             w._thread = None
@@ -248,6 +280,8 @@ class LaminarRouter:
                 # locked, so racing activations start exactly one thread
                 grown.activate()
             with self._lock:
+                if self._virtual_drain and batch.sim_ready > self._sim_frontier:
+                    self._sim_frontier = batch.sim_ready
                 workers = list(self._active)
                 if workers:
                     worker = self.policy.choose(workers, batch, self.stats)

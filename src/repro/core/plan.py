@@ -70,6 +70,14 @@ class PhysicalPlan:
         return out
 
 
+def batches_of(q: Query) -> Iterator[RoutingBatch]:
+    """Public scan path: the routing-batch stream for ``q`` (trivial
+    pushdown + re-chunking).  The QueryService CLI (launch/serve.py)
+    submits this stream directly so single-query and multi-tenant
+    execution share one scan implementation."""
+    return _batches(q)
+
+
 def _batches(q: Query) -> Iterator[RoutingBatch]:
     """Scan -> trivial-filter pushdown -> routing batches (eager drop).
 

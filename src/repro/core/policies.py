@@ -30,7 +30,11 @@ LAMINAR policies pick a worker for a batch:
 
 ARBITER policies decide which predicate a contended device slot goes to
 (§5.2 dynamic resource allocation; see core/resources.py):
-  * PressureRanked    — default: highest measured cost x queue-depth wins.
+  * PressureRanked    — default: highest measured cost x queue-depth wins;
+                        deadline/priority-aware when claimants carry an
+                        URGENCY weight (multi-tenant QueryService: each
+                        query's priority x deadline proximity scales its
+                        predicates' pressure in the comparison).
   * StaticPartition   — ablation: fixed per-predicate quota, no scale-down.
 """
 from __future__ import annotations
@@ -270,6 +274,23 @@ class StickyDevice(LaminarPolicy):
 # --------------------------------------------------------------------------- #
 # Arbiter policies (§5.2 dynamic resource allocation)                          #
 # --------------------------------------------------------------------------- #
+def urgency_weight(priority: float = 1.0, deadline: Optional[float] = None,
+                   now: float = 0.0) -> float:
+    """Deadline/priority urgency multiplier for arbitration pressure.
+
+    ``priority`` scales linearly (a priority-2 query's predicates weigh
+    twice a priority-1 rival's at equal measured pressure). A ``deadline``
+    (absolute, same clock as ``now``) adds proximity urgency that grows as
+    the deadline nears: with ``t = deadline - now`` seconds remaining the
+    weight is ``priority * (1 + 1 / max(t, 0.1))`` — an already-missed or
+    imminent deadline saturates at ``priority * 11`` rather than diverging,
+    so one late query cannot starve the fleet forever."""
+    w = max(0.0, float(priority))
+    if deadline is not None:
+        w *= 1.0 + 1.0 / max(float(deadline) - float(now), 0.1)
+    return w
+
+
 class ArbiterPolicy:
     """Arbitrates device-slot leases between predicate claimants.
 
@@ -281,12 +302,16 @@ class ArbiterPolicy:
     name = "base"
     scale_down = True
 
-    def grant(self, requester: str, *, pressures, wants, held) -> bool:
+    def grant(self, requester: str, *, pressures, wants, held,
+              urgency=None) -> bool:
         """May ``requester`` take a free slot right now?
 
         pressures: claimant -> measured cost x queue-depth pressure
         wants:     claimant -> was recently denied (a live, standing claim)
         held:      claimant -> leases currently held
+        urgency:   claimant -> deadline/priority weight (``urgency_weight``)
+                   or None — absent claimants weigh 1.0, so a single-query
+                   executor arbitrates exactly as before the QueryService
         """
         raise NotImplementedError
 
@@ -299,16 +324,26 @@ class PressureRanked(ArbiterPolicy):
     estimated UDF cost). A requester outranked by a rival with a standing
     denied claim steps aside; rivals whose pressure has since drained to or
     below the requester's no longer block (stale wants are harmless because
-    pressures are always read live)."""
+    pressures are always read live).
+
+    Deadline/priority awareness (multi-tenant QueryService): each
+    claimant's pressure is scaled by its query's urgency weight before the
+    comparison, so a higher-priority or deadline-pressed query wins
+    contended slots at equal measured pressure. With no urgency map (the
+    single-query executor) every weight is 1.0 — bit-identical to the
+    pre-service arbitration."""
 
     name = "pressure"
 
-    def grant(self, requester, *, pressures, wants, held):
+    def grant(self, requester, *, pressures, wants, held, urgency=None):
         rivals = [n for n, w in wants.items() if w and n != requester]
         if not rivals:
             return True
-        mine = pressures.get(requester, 0.0)
-        return all(pressures.get(n, 0.0) <= mine for n in rivals)
+        u = urgency or {}
+        mine = pressures.get(requester, 0.0) * u.get(requester, 1.0)
+        return all(
+            pressures.get(n, 0.0) * u.get(n, 1.0) <= mine for n in rivals
+        )
 
 
 class StaticPartition(ArbiterPolicy):
@@ -323,7 +358,7 @@ class StaticPartition(ArbiterPolicy):
     def __init__(self, quota: Optional[int] = None):
         self.quota = quota
 
-    def grant(self, requester, *, pressures, wants, held):
+    def grant(self, requester, *, pressures, wants, held, urgency=None):
         if self.quota is None:
             return True
         return held.get(requester, 0) < self.quota

@@ -38,6 +38,17 @@ makes that true in this reproduction:
     Counters (``counters()``) are surfaced through
     ``AQPExecutor.stats_snapshot()`` under the reserved ``"_arbiter"`` key.
 
+    Multi-tenancy (QueryService, launch/serve.py): registrations — and
+    therefore leases and slots — carry a QUERY identity (``register(...,
+    query=...)``; ``Slot.last_query``), and each query may carry an
+    URGENCY weight (``note_query_admitted``) folded into ``PressureRanked``
+    arbitration so a higher-priority or deadline-pressed query wins
+    contended slots at equal measured pressure. Admission and completion
+    trigger a PREEMPTION-FREE ``rebalance()``: standing wants from
+    predicates that no longer exert pressure are cleared so freed capacity
+    flows to live claimants on their next ask — held leases are never
+    revoked (routers retire their own leases via the drain path).
+
 Thread-safety / lock order: router lock -> arbiter lock -> pool lock.
 Pressure evaluation inside the arbiter deliberately reads only leaf-locked
 structures (worker queues, PredicateStats) — never a router lock — so a
@@ -67,6 +78,7 @@ class Slot:
     index: int
     last_holder: Optional[str] = None   # wid of the previous lease holder
     last_pred: Optional[str] = None     # predicate that last held the slot
+    last_query: Optional[str] = None    # query identity of the last lease
     sim_horizon: float = 0.0            # SimClock busy horizon at release
 
 
@@ -125,17 +137,22 @@ class ResourceArbiter:
         self._stats: Dict[str, StatsBoard] = {}
         self._clock: Dict[str, object] = {}
         self._wants: Dict[str, bool] = {}        # denied claimants (live ask)
+        self._query: Dict[str, Optional[str]] = {}   # name -> query identity
+        self._urgency: Dict[str, float] = {}     # query -> arbitration weight
         # reallocation counters (exposed via AQPExecutor.stats_snapshot)
         self.leases = 0
         self.releases = 0
         self.denials = 0
         self.cross_pred_handoffs = 0
+        self.cross_query_handoffs = 0
+        self.rebalances = 0
 
     # --------------------------- registration --------------------------- #
     def register(self, name: str, *, num_workers: int,
                  factory: Callable[[int], object],
                  stats: Optional[StatsBoard] = None,
-                 clock: Optional[object] = None) -> List:
+                 clock: Optional[object] = None,
+                 query: Optional[str] = None) -> List:
         """Greedy allocation: pre-create and return all contexts for
         ``name``.
 
@@ -163,6 +180,7 @@ class ResourceArbiter:
             if clock is not None:
                 self._clock[name] = clock
             self._wants[name] = False
+            self._query[name] = query
             return ctxs
 
     def unregister(self, name: str) -> None:
@@ -176,6 +194,7 @@ class ResourceArbiter:
             self._wants.pop(name, None)
             self._stats.pop(name, None)
             self._clock.pop(name, None)
+            self._query.pop(name, None)
 
     # ----------------------------- inventory ---------------------------- #
     def contexts(self, name: str) -> List:
@@ -233,8 +252,13 @@ class ResourceArbiter:
                     for n, w in self._wants.items()
                 }
                 held_counts = {n: len(l) for n, l in self._leased.items()}
+                urgency = {
+                    n: self._urgency.get(self._query.get(n), 1.0)
+                    for n in self._contexts
+                } if self._urgency else None
                 if not self.policy.grant(name, pressures=pressures,
-                                         wants=wants, held=held_counts):
+                                         wants=wants, held=held_counts,
+                                         urgency=urgency):
                     self._deny_locked(name)
                     return None
             for w in candidates:  # index order: deterministic activation
@@ -264,6 +288,10 @@ class ResourceArbiter:
     def _bind_locked(self, name: str, w, slot: Slot) -> None:
         if slot.last_pred is not None and slot.last_pred != name:
             self.cross_pred_handoffs += 1
+        query = self._query.get(name)
+        if slot.last_query is not None and slot.last_query != query:
+            self.cross_query_handoffs += 1
+        slot.last_query = query
         clock = self._clock.get(name)
         if getattr(clock, "simulated", False) and slot.sim_horizon > 0.0:
             # the new lease inherits the physical slot's virtual horizon
@@ -294,9 +322,46 @@ class ResourceArbiter:
                 slot.sim_horizon = 0.0
             slot.last_holder = w.wid
             slot.last_pred = name
+            slot.last_query = self._query.get(name)
             self.pool.release(slot)
         self._wants[name] = False
         self.releases += 1
+
+    # --------------------------- multi-tenancy --------------------------- #
+    def note_query_admitted(self, query: str, urgency: float = 1.0) -> None:
+        """A query entered the service: record its arbitration urgency.
+
+        ``urgency`` (see ``policies.urgency_weight``) multiplies the
+        measured pressure of every predicate registered under ``query``
+        during ``PressureRanked`` arbitration. Admission triggers a
+        preemption-free ``rebalance()`` so standing wants from finished
+        tenants don't shadow the newcomer's first asks."""
+        with self._lock:
+            self._urgency[query] = float(urgency)
+        self.rebalance()
+
+    def note_query_finished(self, query: str) -> None:
+        """A query left the service: drop its urgency and rebalance."""
+        with self._lock:
+            self._urgency.pop(query, None)
+        self.rebalance()
+
+    def rebalance(self) -> None:
+        """Preemption-free rebalance on query admit/finish.
+
+        Clears standing wants from claimants that no longer exert pressure
+        (their queues drained or they unregistered) so freed capacity flows
+        to live claimants on their next ask. Held leases are NEVER revoked
+        — routers retire their own leases via the drain path."""
+        with self._lock:
+            stale = [
+                n for n, wanting in self._wants.items()
+                if wanting and (n not in self._contexts
+                                or self.pressure_of(n) <= 0.0)
+            ]
+            for n in stale:
+                self._wants[n] = False
+            self.rebalances += 1
 
     # ------------------------------ metrics ------------------------------ #
     def counters(self) -> Dict[str, object]:
@@ -306,5 +371,7 @@ class ResourceArbiter:
                 "releases": self.releases,
                 "denials": self.denials,
                 "cross_pred_handoffs": self.cross_pred_handoffs,
+                "cross_query_handoffs": self.cross_query_handoffs,
+                "rebalances": self.rebalances,
                 "policy": self.policy.name,
             }

@@ -547,6 +547,16 @@ class StatsBoard:
             name = "kernel:" + name
         return self.ensure(name)
 
+    def batch_counts(self) -> Dict[str, int]:
+        """Merged per-predicate batch counts (declared predicates only).
+
+        The live-fold bookkeeping the multi-tenant service reads: paired
+        with ``StatsStore.record_live`` it tells how much NEW evidence a
+        running executor has produced since the last cross-query fold."""
+        with self._lock:
+            items = list(self.preds.items())
+        return {name: st.batches for name, st in items}
+
     def all_measured(self, exclude: Sequence[str] = ()) -> bool:
         """Warmup gate: every DECLARED routing predicate has a measurement.
 

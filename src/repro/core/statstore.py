@@ -199,6 +199,37 @@ class StatsStore:
                 batches=st.batches - base,
             )
 
+    def record_live(self, board, predicates: List,
+                    bases: Dict[str, int]) -> Dict[str, int]:
+        """Fold a STILL-RUNNING executor's live profile into the store.
+
+        The multi-tenant live-prior channel (launch/serve.py QueryService):
+        before dispatching a new query, the service folds each running
+        executor's current board here so the newcomer's ``warm_start``
+        sees its rivals' in-flight measurements, not just finished runs.
+
+        ``bases`` maps predicate name -> batch count already folded (the
+        warm-start seed on first call, then whatever this method returned
+        last time); only the delta since the base is observed, so repeated
+        folds never double-count evidence. Returns the updated bases."""
+        out = dict(bases)
+        for p in predicates:
+            try:
+                st = board[p.name]
+            except KeyError:
+                continue
+            base = out.get(p.name, 0)
+            if st.batches <= base:
+                continue
+            self.observe(
+                fingerprint_of(p),
+                cost_per_row=st.cost(),
+                selectivity=st.selectivity(),
+                batches=st.batches - base,
+            )
+            out[p.name] = st.batches
+        return out
+
     # ----------------------------- disk ----------------------------- #
     def flush(self) -> None:
         """Atomic JSON snapshot (temp file + ``os.replace``)."""

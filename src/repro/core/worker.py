@@ -334,10 +334,32 @@ def evaluate_resilient(
     if batch.rows == 0:
         return batch.mark_visited(pred.name)
     if ledger.is_quarantined(pred.name):
-        # raced into the worker queue after quarantine tripped: same
-        # conservative verdict the routing-level skip would have applied
-        ledger.note_quarantined_batch(pred.name, batch.rows)
-        return passthrough_batch(batch, pred.name)
+        if not ledger.begin_probe(pred.name):
+            # raced into the worker queue after quarantine tripped: same
+            # conservative verdict the routing-level skip would have applied
+            ledger.note_quarantined_batch(pred.name, batch.rows)
+            return passthrough_batch(batch, pred.name)
+        # recovery probe (FaultConfig.probe_after_skips): the eddy routed
+        # this ONE batch at the quarantined predicate deliberately — a
+        # single attempt, no retries.  Success lifts the quarantine and
+        # normal routing resumes; failure passes the batch through and
+        # re-arms the skip window.
+        try:
+            out = evaluate_predicate(
+                pred, batch, stats=stats, cache=cache, clock=clock,
+                worker_id=worker_id, device_group=device_group,
+                serial_fraction=serial_fraction, faults=faults,
+            )
+        except ClosedError:
+            raise
+        except Exception as e:
+            ledger.note_failure(pred.name, error=e)
+            ledger.end_probe(pred.name, success=False)
+            ledger.note_quarantined_batch(pred.name, batch.rows)
+            return passthrough_batch(batch, pred.name)
+        ledger.note_success(pred.name)
+        ledger.end_probe(pred.name, success=True)
+        return out
     simulated = getattr(clock, "simulated", False)
     attempt = 0
     while True:
@@ -503,7 +525,12 @@ class WorkerContext:
         path (mark-visited only); the non-empty remainder fuses into one
         launch when there are at least two."""
         fusable = [b for b in batches if b.rows > 0]
-        if len(fusable) < 2:
+        if len(fusable) < 2 or (
+            # quarantined: per-batch path so the pass-through / recovery-
+            # probe bookkeeping in evaluate_resilient sees every batch
+            self.ledger is not None
+            and self.ledger.is_quarantined(self.pred.name)
+        ):
             return [self._evaluate_one(b) for b in batches]
         try:
             fused_outs = iter(evaluate_fused(

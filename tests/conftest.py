@@ -30,8 +30,11 @@ def rng():
 # Launch-watchdog scan threads (core/faults.LaunchWatchdog, name
 # "fault-watchdog") are daemons too and must be stop()ped by executor
 # shutdown — a lingering one means a teardown path skipped it.
+# QueryService threads (launch/serve.py: "svc-dispatch" dispatcher and
+# "svc-query-*" runners) are daemons joined by ``close()`` — one alive at
+# session end means a service was never closed.
 # --------------------------------------------------------------------------- #
-_GUARDED_DAEMON_PREFIXES = ("eddy-shard-", "eddy-pull", "fault-watchdog")
+_GUARDED_DAEMON_PREFIXES = ("eddy-shard-", "eddy-pull", "fault-watchdog", "svc-")
 
 
 def _live_nondaemon_threads():

@@ -567,6 +567,167 @@ def test_faults_snapshot_key_contract():
     assert set(f) == {
         "failures", "successes", "retries", "consecutive_failures",
         "error_rate", "quarantined", "degraded", "quarantined_batches",
-        "quarantined_rows", "deadline_hits", "skipped_routes", "last_error",
+        "quarantined_rows", "deadline_hits", "skipped_routes", "probes",
+        "unquarantines", "last_error",
     }
     assert f["failures"] == 1 and f["successes"] == 1
+
+
+# ------------------------------------------------------------------ #
+# Recovery probes + un-quarantine (PR-9 residual)
+# ------------------------------------------------------------------ #
+def test_probe_state_machine_success_unquarantines():
+    """Ledger-level walk of the probe protocol: quarantine -> skips arm a
+    probe -> single probe route/claim -> success clears quarantine."""
+    led = FaultLedger(["a"], probe_after_skips=2)
+    led.note_failure("a", RuntimeError("x"))
+    led.note_failure("a", RuntimeError("x"))
+    led.set_quarantined("a")
+    assert led.is_quarantined("a")
+    assert not led.take_probe_route("a")   # probe not armed yet
+    led.note_skip("a")
+    led.note_skip("a")                     # threshold -> armed
+    assert led.take_probe_route("a")       # claimed exactly once
+    assert not led.take_probe_route("a")
+    assert led.begin_probe("a")            # worker claims the in-flight flag
+    assert not led.begin_probe("a")
+    assert led.end_probe("a", success=True)
+    assert not led.is_quarantined("a")
+    s = led.snapshot()["a"]
+    assert s["probes"] == 1 and s["unquarantines"] == 1
+    assert s["consecutive_failures"] == 0
+
+
+def test_probe_failure_rearms_skip_window():
+    led = FaultLedger(["a"], probe_after_skips=1)
+    led.note_failure("a", RuntimeError("x"))
+    led.set_quarantined("a")
+    led.note_skip("a")
+    assert led.take_probe_route("a") and led.begin_probe("a")
+    assert not led.end_probe("a", success=False)
+    assert led.is_quarantined("a")         # still out
+    assert not led.take_probe_route("a")   # window re-armed: needs new skips
+    led.note_skip("a")
+    assert led.take_probe_route("a")       # next window arms another probe
+    assert led.snapshot()["a"]["probes"] == 2
+    assert led.snapshot()["a"]["unquarantines"] == 0
+
+
+def test_probe_unquarantines_recovered_predicate_end_to_end():
+    """A predicate that fails its first two launches gets quarantined,
+    skipped batches arm a probe, the probe SUCCEEDS, and routing resumes
+    real evaluation — later batches are filtered, not passed through."""
+    def fn(d):
+        return d["rid"] % 2 == 0
+
+    udf = UDF("pr", fn=fn, columns=("rid",), bucket=False)
+    p = Predicate("pr", udf, compare=lambda o: o.astype(bool))
+    plan = FaultPlan().fail("pr", attempts=(1, 2))
+    cfg = FaultConfig(mode="retry", max_attempts=1, quarantine_after=2,
+                      backoff_base_s=0.0, jitter=0.0, probe_after_skips=2)
+    ex = AQPExecutor([p], max_workers=1, warmup=False, on_fault=cfg,
+                     fault_plan=plan)
+    out = _collect_with_timeout(ex, iter(_rid_batches(28, per=4)))
+    # which batches end up flagged depends on pipeline interleaving (the
+    # failed batch recirculates and may itself become the probe), so
+    # assert the invariants: flagged batches keep ALL their rows, clean
+    # batches are REALLY filtered, every even row survives somewhere,
+    # and the probe un-quarantined the predicate.
+    flagged = [b for b in out if "pr" in b.passthrough]
+    clean = [b for b in out if "pr" not in b.passthrough]
+    assert clean, "no batch was evaluated after recovery"
+    assert all(int(r) % 2 == 0 for b in clean for r in b.row_ids)
+    ms = _multiset(out)
+    assert all(ms[i] == 1 for i in range(0, 28, 2))    # evens all survive
+    odd_kept = {i for i in range(1, 28, 2) if ms[i]}
+    assert odd_kept == {int(r) for b in flagged
+                        for r in b.row_ids if int(r) % 2}
+    f = ex.stats_snapshot()["_faults"]["pr"]
+    assert f["probes"] == 1 and f["unquarantines"] == 1
+    assert not f["quarantined"]
+    assert f["skipped_routes"] >= 2
+
+
+def test_probe_off_by_default_preserves_quarantine_behavior():
+    led = FaultLedger(["a"])
+    led.note_failure("a", RuntimeError("x"))
+    led.set_quarantined("a")
+    for _ in range(50):
+        led.note_skip("a")
+        assert not led.take_probe_route("a")
+    assert led.is_quarantined("a")
+    with pytest.raises(ValueError, match="probe_after_skips"):
+        FaultConfig(probe_after_skips=0)
+
+
+# ------------------------------------------------------------------ #
+# Re-verification queue (reverify=; PR-9 residual)
+# ------------------------------------------------------------------ #
+def test_reverify_queue_drains_after_recovery():
+    from repro.core import ReverifyQueue
+
+    def fn(d):
+        return d["rid"] % 2 == 0
+
+    udf = UDF("rv", fn=fn, columns=("rid",), bucket=False)
+    p = Predicate("rv", udf, compare=lambda o: o.astype(bool))
+    led = FaultLedger(["rv"])
+    rq = ReverifyQueue([p], led)
+    flagged = _rid_batches(4, per=4)[0].mark_passthrough("rv")
+    assert rq.offer(flagged) is None       # intercepted, held
+    assert rq.pending() == 1
+    assert rq.drain() == []                # no successes yet -> not recovered
+    led.note_success("rv")
+    out = rq.drain()
+    assert len(out) == 1 and not out[0].passthrough
+    assert _multiset(out) == Counter([0, 2])   # re-verified for real
+    snap = rq.snapshot()
+    assert snap["intercepted"] == 1 and snap["reverified_batches"] == 1
+    assert snap["reverified_rows"] == 4 and snap["dropped_rows"] == 2
+    assert snap["pending"] == 0
+    # clean batches pass straight through
+    clean = _rid_batches(4, per=4)[0]
+    assert rq.offer(clean) is clean
+
+
+def test_reverify_queue_forced_release_keeps_flags():
+    from repro.core import ReverifyQueue
+
+    def fn(d):
+        raise AssertionError("must not re-evaluate an unrecovered predicate")
+
+    udf = UDF("rv", fn=fn, columns=("rid",), bucket=False)
+    p = Predicate("rv", udf, compare=lambda o: o.astype(bool))
+    led = FaultLedger(["rv"])
+    led.note_failure("rv", RuntimeError("x"))
+    led.set_quarantined("rv")                      # quarantined, 0 successes
+    rq = ReverifyQueue([p], led)
+    flagged = _rid_batches(4, per=4)[0].mark_passthrough("rv")
+    assert rq.offer(flagged) is None
+    out = rq.drain(force=True)                     # shutdown path
+    assert len(out) == 1 and "rv" in out[0].passthrough
+    assert _multiset(out) == Counter(range(4))     # conservative: rows kept
+    assert rq.snapshot()["released_flagged"] == 1
+
+
+def test_executor_reverify_repairs_passthrough_batches():
+    """End-to-end ``reverify=True``: the batch that completed as a
+    pass-through while 'rv' was failing is re-verified once the ledger
+    recovers — the final output has NO flagged rows and the exact
+    fully-filtered multiset."""
+    def fn(d):
+        return d["rid"] % 2 == 0
+
+    udf = UDF("rv", fn=fn, columns=("rid",), bucket=False)
+    p = Predicate("rv", udf, compare=lambda o: o.astype(bool))
+    plan = FaultPlan().fail("rv", attempts=(1,))
+    cfg = FaultConfig(mode="retry", max_attempts=1, quarantine_after=100,
+                      backoff_base_s=0.0, jitter=0.0)
+    ex = AQPExecutor([p], max_workers=1, warmup=False, on_fault=cfg,
+                     fault_plan=plan, reverify=True)
+    out = _collect_with_timeout(ex, iter(_rid_batches(20, per=4)))
+    assert not any(b.passthrough for b in out)
+    assert _multiset(out) == Counter(range(0, 20, 2))
+    svc = ex.stats_snapshot()["_service"]
+    assert svc["reverify"]["reverified_batches"] == 1
+    assert svc["reverify"]["intercepted"] == 1

@@ -436,3 +436,173 @@ def test_token_hooks_are_thread_affine(rng):
         launch.remove_launch_hook(h_tok)
         launch.remove_launch_hook(h_glob)
     assert tok not in launch._TOKEN_HOOKS               # registry cleaned up
+
+
+# --------------------------------------------------------------------------- #
+# Multi-tenant arbitration: urgency, query identity, rebalance (QueryService) #
+# --------------------------------------------------------------------------- #
+def test_urgency_weight_priority_and_deadline():
+    from repro.core import urgency_weight
+
+    assert urgency_weight() == 1.0
+    assert urgency_weight(2.0) == 2.0                  # priority is linear
+    assert urgency_weight(-3.0) == 0.0                 # clamped at zero
+    soon = urgency_weight(1.0, deadline=100.5, now=100.0)
+    later = urgency_weight(1.0, deadline=150.0, now=100.0)
+    assert soon > later > 1.0                          # proximity urgency
+    # an already-missed deadline saturates instead of diverging
+    assert urgency_weight(1.0, deadline=90.0, now=100.0) == pytest.approx(11.0)
+
+
+def test_pressure_ranked_urgency_breaks_pressure_tie():
+    """Equal measured pressure: the higher-urgency (deadline-pressed /
+    higher-priority) claimant wins the contended slot; with no urgency
+    map the comparison is bit-identical to the pre-service behavior."""
+    pol = PressureRanked()
+    pressures = {"a": 1.0, "b": 1.0}
+    wants = {"a": True, "b": True}
+    assert pol.grant("a", pressures=pressures, wants=wants, held={})
+    assert pol.grant("b", pressures=pressures, wants=wants, held={})
+    urgency = {"a": 1.0, "b": 3.0}
+    assert not pol.grant("a", pressures=pressures, wants=wants, held={},
+                         urgency=urgency)
+    assert pol.grant("b", pressures=pressures, wants=wants, held={},
+                     urgency=urgency)
+
+
+def test_slots_carry_query_identity_and_count_handoffs():
+    arb = ResourceArbiter(pool=DevicePool({"g": 1}))
+    arb.register("a", num_workers=2, factory=_fake_factory("a"), query="q1")
+    arb.register("b", num_workers=2, factory=_fake_factory("b"), query="q2")
+    wa = arb.lease("a")
+    arb.release("a", wa)
+    wb = arb.lease("b")                    # q1 -> q2: cross-query handoff
+    assert arb.counters()["cross_query_handoffs"] == 1
+    arb.release("b", wb)
+    assert arb.lease("b") is not None      # q2 -> q2: same query, no count
+    assert arb.counters()["cross_query_handoffs"] == 1
+
+
+def test_admit_finish_rebalance_clears_stale_wants():
+    """note_query_admitted/-finished rebalance WITHOUT preemption: stale
+    zero-pressure standing claims are dropped, held leases untouched."""
+    board = StatsBoard(["a", "b"])
+    board["a"].cost_per_row.update(1.0)
+    arb = ResourceArbiter(pool=DevicePool({"g": 1}),
+                          policy=PressureRanked())
+    _register(arb, "a", board=board)
+    _register(arb, "b", board=board)
+    wa = arb.lease("a")                    # floor lease: pool now full
+    assert arb.lease("b") is None          # b: standing want, zero pressure
+    arb.note_query_admitted("q2", 2.0)
+    assert arb.counters()["rebalances"] == 1
+    assert not arb._wants["b"]             # stale want cleared
+    assert len(arb.leased("a")) == 1       # a's lease survived untouched
+    arb.note_query_finished("q2")
+    assert arb.counters()["rebalances"] == 2
+    assert wa is not None
+
+
+# --------------------------------------------------------------------------- #
+# Virtual-idle drain under SimClock (ROADMAP residual)                        #
+# --------------------------------------------------------------------------- #
+def _sim_arrival_source(pred_col_batches, late_sim_ready, gap_s):
+    from dataclasses import replace
+
+    def source():
+        for b in pred_col_batches[:-1]:
+            yield b                              # burst at virtual t=0
+        # the late arrival advances the router's virtual frontier...
+        yield replace(pred_col_batches[-1], sim_ready=late_sim_ready)
+        # ...then a WALL gap gives the idle polls time to read it
+        time.sleep(gap_s)
+
+    return source
+
+
+def test_virtual_idle_drain_retires_under_simclock():
+    """``virtual_drain=True``: scale-down verdicts read VIRTUAL idleness
+    (sim frontier vs worker busy horizon), so a simulated arrival gap
+    retires scaled-up workers even though wall-clock idle is milliseconds."""
+    from repro.udfs.synthetic import planted_predicate
+
+    p = planted_predicate("p", range(10000), cost_per_row=0.1)
+    batches = [make_batch({"rid": np.arange(i, i + 10)},
+                          np.arange(i, i + 10))
+               for i in range(0, 300, 10)]
+    ex = AQPExecutor([p], clock=SimClock(), max_workers=4, warmup=False,
+                     virtual_drain=True, drain_threshold=5.0)
+    out = list(ex.run(_sim_arrival_source(batches, 1e6, gap_s=0.4)()))
+    assert sum(b.rows for b in out) == 300
+    assert ex.laminars["p"].retirements >= 1, \
+        "virtual arrival gap never retired a scaled-up worker"
+
+
+def test_simclock_without_virtual_drain_never_retires():
+    from repro.udfs.synthetic import planted_predicate
+
+    p = planted_predicate("p", range(10000), cost_per_row=0.1)
+    batches = [make_batch({"rid": np.arange(i, i + 10)},
+                          np.arange(i, i + 10))
+               for i in range(0, 300, 10)]
+    ex = AQPExecutor([p], clock=SimClock(), max_workers=4, warmup=False,
+                     drain_threshold=5.0)
+    out = list(ex.run(_sim_arrival_source(batches, 1e6, gap_s=0.3)()))
+    assert sum(b.rows for b in out) == 300
+    assert ex.laminars["p"].retirements == 0   # pinned SimClock behavior
+
+
+# --------------------------------------------------------------------------- #
+# Multi-tenant service stress: attribution + per-query correctness            #
+# --------------------------------------------------------------------------- #
+def test_service_tenants_no_cross_query_kernel_leakage():
+    """The QueryService version of the cross-record attribution test:
+    kernel-backed tenants run CONCURRENTLY under one shared arbiter, and
+    each QueryReport's board holds only its own kernel's entries and its
+    exact standalone row-id multiset."""
+    from collections import Counter
+
+    from repro import udfs
+    from repro.launch.serve import QueryService
+
+    SIZE, SEQ, N = 8, 16, 12
+    rng = np.random.default_rng(0)
+    crops = rng.uniform(0, 255, (N, SIZE, SIZE, 3)).astype(np.float32)
+    tokens = rng.integers(1, 256, (N, 12)).astype(np.int32)
+
+    def batches(col, arr):
+        return [make_batch({col: arr[i:i + 4]}, np.arange(i, i + 4))
+                for i in range(0, N, 4)]
+
+    def preds():
+        return {
+            "crop": udfs.color_predicate("black", size=SIZE),
+            "tokens": udfs.topic_router_predicate(0, n_experts=4, seq=SEQ),
+        }
+
+    # expected multisets from standalone serial runs of the SAME data
+    expected = {}
+    for col, arr in (("crop", crops), ("tokens", tokens)):
+        ex = AQPExecutor([preds()[col]], max_workers=2, warmup=False)
+        expected[col] = Counter(
+            int(i) for b in ex.collect(iter(batches(col, arr)))
+            for i in b.row_ids
+        )
+
+    with QueryService(max_concurrent=2) as svc:
+        h_hsv = svc.submit([preds()["crop"]], iter(batches("crop", crops)),
+                           max_workers=2, warmup=False)
+        h_moe = svc.submit([preds()["tokens"]],
+                           iter(batches("tokens", tokens)),
+                           max_workers=2, warmup=False)
+        rep_hsv = h_hsv.result(timeout=120)
+        rep_moe = h_moe.result(timeout=120)
+
+    assert rep_hsv.state == "DONE" and rep_moe.state == "DONE"
+    assert Counter(map(int, rep_hsv.row_ids)) == expected["crop"]
+    assert Counter(map(int, rep_moe.row_ids)) == expected["tokens"]
+    # each board saw its OWN kernel and nothing from the other tenant
+    assert any("hsv_color" in k for k in rep_hsv.board_predicates)
+    assert any("moe_router" in k for k in rep_moe.board_predicates)
+    assert not any("moe_router" in k for k in rep_hsv.board_predicates)
+    assert not any("hsv_color" in k for k in rep_moe.board_predicates)
